@@ -1,0 +1,103 @@
+"""Paper Figure 5: proportional bisection bandwidth (BW / 2m) vs node count.
+
+Curves per topology family under the paper's §5 assumptions (radix regimes
+<=64 current / <=128 next-gen; butterfly s>=3, CLEX ell>=2 & k>=3, DV C>=3,
+torus k>=3) + the Ramanujan Fiedler floor (k - 2 sqrt(k-1)) n/4 / (kn/2).
+"""
+from __future__ import annotations
+
+import math
+import pathlib
+from typing import List
+
+from repro.core import bounds as B
+
+
+def _ram_floor(k: float) -> float:
+    # proportional: Fiedler LB at Ramanujan rho2, over 2m = k*n
+    return B.ramanujan_rho2(k) / (4.0 * k)
+
+
+def curves(radix_cap: int = 64) -> List[dict]:
+    rows = []
+    # Butterfly(k, s): radix 2k, n = s k^s, BW_ub = (k+1)k^s/2, 2m = 2k n
+    for k in (2, 3, 4, 8, 16, 32):
+        if 2 * k > radix_cap:
+            continue
+        for s in range(3, 12):
+            e = B.TABLE1["butterfly"](k, s)
+            rows.append(dict(topology="butterfly", nodes=e["nodes"],
+                             prop_bw=e["bw_ub"] / (e["radix"] * e["nodes"]),
+                             radix=e["radix"]))
+    # CCC(d): radix 3
+    for d in range(3, 22):
+        e = B.TABLE1["ccc"](d)
+        rows.append(dict(topology="ccc", nodes=e["nodes"],
+                         prop_bw=e["bw_ub"] / (e["radix"] * e["nodes"]),
+                         radix=3))
+    # CLEX(k, ell)
+    for k in range(3, 20):
+        for ell in range(2, 8):
+            e = B.TABLE1["clex"](k, ell)
+            if e["radix"] > radix_cap or e["nodes"] > 3e6:
+                continue
+            rows.append(dict(topology="clex", nodes=e["nodes"],
+                             prop_bw=e["bw_ub"] / (e["radix"] * e["nodes"]),
+                             radix=e["radix"]))
+    # DataVortex(A, C): radix 4
+    for A in (4, 8, 16, 32, 64):
+        for C in range(3, 12):
+            e = B.TABLE1["data_vortex"](A, C)
+            if e["nodes"] > 3e6:
+                continue
+            rows.append(dict(topology="data_vortex", nodes=e["nodes"],
+                             prop_bw=e["bw_ub"] / (e["radix"] * e["nodes"]),
+                             radix=4))
+    # Hypercube
+    for d in range(3, 22):
+        if d > radix_cap:
+            continue
+        e = B.TABLE1["hypercube"](d)
+        rows.append(dict(topology="hypercube", nodes=e["nodes"],
+                         prop_bw=e["bw_ub"] / (e["radix"] * e["nodes"]),
+                         radix=d))
+    # SlimFly(q): prime q = 1 mod 4
+    for q in (5, 13, 17, 29, 37, 41, 53, 61, 73, 89, 97):
+        e = B.TABLE1["slimfly"](q)
+        if e["radix"] > radix_cap:
+            continue
+        rows.append(dict(topology="slimfly", nodes=e["nodes"],
+                         prop_bw=e["bw_ub"] / (e["radix"] * e["nodes"]),
+                         radix=e["radix"]))
+    # Torus(k, d)
+    for d in (2, 3, 4, 5):
+        for k in (3, 4, 8, 16, 32, 64):
+            e = B.TABLE1["torus"](k, d)
+            if e["nodes"] > 3e6 or e["radix"] > radix_cap:
+                continue
+            rows.append(dict(topology="torus", nodes=e["nodes"],
+                             prop_bw=e["bw_ub"] / (e["radix"] * e["nodes"]),
+                             radix=e["radix"]))
+    # Ramanujan floor at matched radixes
+    for k in (3, 4, 6, 8, 16, 32, 64, 128):
+        if k > radix_cap + 64:
+            continue
+        for n in (1e2, 1e3, 1e4, 1e5, 1e6):
+            rows.append(dict(topology=f"ramanujan_floor_k{k}", nodes=int(n),
+                             prop_bw=_ram_floor(k), radix=k))
+    return rows
+
+
+def run(out_csv: str = "benchmarks/out/fig5.csv") -> List[dict]:
+    rows = curves(64) + [dict(r, regime="128") for r in curves(128)]
+    p = pathlib.Path(out_csv)
+    p.parent.mkdir(parents=True, exist_ok=True)
+    cols = ["topology", "nodes", "prop_bw", "radix"]
+    p.write_text("\n".join([",".join(cols)] +
+                           [",".join(str(r[c]) for c in cols) for r in rows]))
+    return rows
+
+
+if __name__ == "__main__":
+    rows = run()
+    print(f"{len(rows)} curve points written")

@@ -1,0 +1,60 @@
+"""Roofline table from the dry-run artifacts (deliverable g).
+
+Reads experiments/dryrun/*.json, emits the per-(arch x shape x mesh) table:
+three terms, dominant bottleneck, MODEL_FLOPS/HLO_FLOPS ratio, bytes/device.
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+from typing import List
+
+
+def run(dryrun_dir: str = "experiments/dryrun",
+        out_csv: str = "benchmarks/out/roofline.csv") -> List[dict]:
+    rows = []
+    for p in sorted(pathlib.Path(dryrun_dir).glob("*.json")):
+        r = json.loads(p.read_text())
+        rf = r["roofline"]
+        dom_s = max(rf["compute_s"], rf["memory_s"], rf["collective_s"])
+        rows.append(dict(
+            arch=r["arch"], shape=r["shape"], mesh=r["mesh"],
+            compute_s=round(rf["compute_s"], 5),
+            memory_s=round(rf["memory_s"], 5),
+            collective_s=round(rf["collective_s"], 5),
+            dominant=rf["dominant"],
+            roofline_fraction=round(rf["compute_s"] / max(dom_s, 1e-12), 4),
+            useful_flops_ratio=round(r["useful_flops_ratio"], 4),
+            hbm_gb_per_device=round(r["memory"]["peak_bytes"] / 1e9, 2),
+            fits_16gb=r["memory"]["peak_bytes"] <= 16e9,
+            ag_gb=round(r["collectives"]["bytes_by_kind"]["all-gather"] / 1e9, 3),
+            ar_gb=round(r["collectives"]["bytes_by_kind"]["all-reduce"] / 1e9, 3),
+            a2a_gb=round(r["collectives"]["bytes_by_kind"]["all-to-all"] / 1e9, 3),
+            rs_gb=round(r["collectives"]["bytes_by_kind"]["reduce-scatter"] / 1e9, 3),
+            compile_s=r["compile_seconds"],
+        ))
+    out = pathlib.Path(out_csv)
+    out.parent.mkdir(parents=True, exist_ok=True)
+    if rows:
+        cols = list(rows[0])
+        out.write_text("\n".join([",".join(cols)] +
+                                 [",".join(str(r[c]) for c in cols) for r in rows]))
+    return rows
+
+
+def markdown_table(rows: List[dict]) -> str:
+    if not rows:
+        return "(no dry-run artifacts yet)"
+    cols = ["arch", "shape", "mesh", "compute_s", "memory_s", "collective_s",
+            "dominant", "roofline_fraction", "useful_flops_ratio",
+            "hbm_gb_per_device"]
+    lines = ["| " + " | ".join(cols) + " |",
+             "|" + "|".join("---" for _ in cols) + "|"]
+    for r in rows:
+        lines.append("| " + " | ".join(str(r[c]) for c in cols) + " |")
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    rows = run()
+    print(markdown_table(rows))

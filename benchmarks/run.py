@@ -1,0 +1,35 @@
+"""Benchmark aggregator. One function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV (scaffold contract); detailed CSVs go
+to benchmarks/out/.
+"""
+from __future__ import annotations
+
+import time
+
+
+def _timed(name, fn, derive):
+    t0 = time.time()
+    rows = fn()
+    us = (time.time() - t0) * 1e6
+    print(f"{name},{us:.0f},{derive(rows)}")
+    return rows
+
+
+def main() -> None:
+    from . import collective_model, fig5, lps_bench, roofline, table1
+
+    _timed("table1_rho2_bw_bounds", table1.run,
+           lambda rows: f"all_rho2_bounds_hold={all(r['rho2_ok'] for r in rows)}")
+    _timed("fig5_proportional_bw", fig5.run,
+           lambda rows: f"curve_points={len(rows)}")
+    _timed("lps_ramanujan_cert", lps_bench.run,
+           lambda rows: f"all_ramanujan={all(r['ramanujan'] for r in rows)}")
+    _timed("collective_model_torus_vs_lps", collective_model.run,
+           lambda rows: "max_speedup=%.1fx" % max(r["speedup_vs_torus"] for r in rows))
+    _timed("roofline_dryrun_table", roofline.run,
+           lambda rows: f"cells={len(rows)}")
+
+
+if __name__ == "__main__":
+    main()

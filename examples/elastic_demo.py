@@ -1,0 +1,58 @@
+"""Fault-tolerance walkthrough: crash -> restore -> elastic re-mesh, plus the
+paper's discrepancy certificate for degraded operation.
+
+    PYTHONPATH=src python examples/elastic_demo.py
+"""
+import shutil
+import tempfile
+
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.configs.base import reduced
+from repro.data.pipeline import DataConfig
+from repro.optim.adamw import AdamWConfig
+from repro.runtime.fault_tolerance import (degraded_operation_certificate,
+                                           plan_elastic_remesh)
+from repro.runtime.trainer import Trainer, TrainerConfig
+
+
+def main():
+    tmp = tempfile.mkdtemp(prefix="elastic_demo_")
+    cfg = reduced(get_config("qwen2-7b"), repeats=1)
+    opt = AdamWConfig(lr=1e-3, warmup_steps=2, total_steps=24)
+    data = DataConfig(global_batch=4, seq_len=32, vocab_size=cfg.vocab_size)
+    tcfg = TrainerConfig(total_steps=24, ckpt_every=6, ckpt_dir=tmp)
+
+    print("1. train 12 steps with checkpoints every 6 ...")
+    t = Trainer(cfg, opt, data, tcfg)
+    t.init_or_restore()
+    t.run(steps=12)
+    print(f"   loss at step 12: {t.history[-1]['loss']:.4f}")
+
+    print("2. 'crash' — new process restores from the atomic checkpoint ...")
+    t2 = Trainer(cfg, opt, data, tcfg)
+    resumed = t2.init_or_restore()
+    print(f"   resumed at step {resumed}")
+    t2.run(steps=12)
+    print(f"   loss at step 24: {t2.history[-1]['loss']:.4f}")
+
+    print("3. elastic re-mesh after losing 16 of 512 chips (TP axis kept):")
+    plan = plan_elastic_remesh(n_devices=512, lost=16, model_axis=16)
+    print(f"   {plan.old_devices} -> {plan.new_devices} chips, "
+          f"new mesh {plan.new_mesh_shape}  ({plan.note})")
+    print("   (restore path re-places the same checkpoint under the new mesh\n"
+          "    via runtime.fault_tolerance.reshard — same arrays, new shardings)")
+
+    print("4. the paper's degraded-operation certificate (LPS interconnect):")
+    for alpha in (0.97, 0.9, 0.8):
+        cert = degraded_operation_certificate(n=4896, radix=18, alpha=alpha)
+        print(f"   alpha={alpha:.2f}: guaranteed bisection >= "
+              f"{cert.guaranteed_bisection_edges:8.0f} edges on ANY surviving set")
+    print("   a torus gives 0 guaranteed edges for non-contiguous survivors.")
+    shutil.rmtree(tmp, ignore_errors=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,5 @@
+from .base import (SHAPES, ArchConfig, LayerSpec, ShapeSpec, cells_for,
+                   get_config, list_configs, register)
+
+__all__ = ["SHAPES", "ArchConfig", "LayerSpec", "ShapeSpec", "cells_for",
+           "get_config", "list_configs", "register"]

@@ -1,0 +1,27 @@
+"""jit'd wrapper + Lanczos matvec factory backed by the kernel."""
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import cayley_spmv
+from .ref import spmv_ref
+
+
+@functools.partial(jax.jit, static_argnames=("use_kernel", "interpret"))
+def adjacency_matvec(x, table, loops=None, use_kernel: bool = True,
+                     interpret: bool = True):
+    if use_kernel:
+        return cayley_spmv(x, table, loops, interpret=interpret)
+    return spmv_ref(x, table, loops)
+
+
+def kernel_matvec(table, loops=None, interpret: bool = True):
+    """Drop-in replacement for repro.core.spectral.table_matvec."""
+    tab = jnp.asarray(table, dtype=jnp.int32)
+    lw = None if loops is None else jnp.asarray(loops, dtype=jnp.float32)
+
+    def mv(x):
+        return cayley_spmv(x, tab, lw, interpret=interpret)
+
+    return mv

@@ -1,0 +1,9 @@
+"""Pure-jnp oracle: the table matvec used by repro.core.spectral."""
+import jax.numpy as jnp
+
+
+def spmv_ref(x, table, loops=None):
+    y = jnp.sum(x[table], axis=1)
+    if loops is not None:
+        y = y + loops * x
+    return y

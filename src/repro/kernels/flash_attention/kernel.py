@@ -1,0 +1,113 @@
+"""Flash attention TPU kernel (pl.pallas_call + explicit BlockSpec VMEM tiling).
+
+Canonical TPU formulation: grid (B, H, num_q_blocks, num_k_blocks) executed
+minor-to-major, so the k-block axis is innermost and the online-softmax state
+(m, l, acc) persists in VMEM scratch across k blocks of one q block.  Causal
+masking prunes fully-masked k blocks with @pl.when (no MXU work issued).
+
+Block shapes are MXU-aligned (multiples of 128 on the q/k dims; head_dim is
+the lane dim).  q/k/v stream HBM->VMEM one block at a time: VMEM footprint =
+(bq + 2*bk) * D + bq * D accumulator.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _fa_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+               causal: bool, scale: float, block_q: int, block_k: int,
+               num_k_blocks: int, seq_k: int):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    # causal block pruning: k block strictly in the future contributes nothing
+    run = (not causal) or True
+    q_start = qi * block_q
+    k_start = ki * block_k
+
+    @pl.when((not causal) or (k_start <= q_start + block_q - 1))
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)                 # (bq, D)
+        k = k_ref[0, 0].astype(jnp.float32)                 # (bk, D)
+        v = v_ref[0, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        q_pos = q_start + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0)
+        k_pos = k_start + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
+        mask = k_pos < seq_k
+        if causal:
+            mask &= q_pos >= k_pos
+        s = jnp.where(mask, s, NEG_INF)
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        corr = jnp.exp(m_prev - m_new)
+        l_scr[...] = l_scr[...] * corr + p.sum(axis=1)
+        acc_scr[...] = acc_scr[...] * corr[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+        m_scr[...] = m_new
+
+    @pl.when(ki == num_k_blocks - 1)
+    def _finalize():
+        o_ref[0, 0] = (acc_scr[...]
+                       / jnp.maximum(l_scr[...], 1e-30)[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "block_q", "block_k",
+                                             "interpret"))
+def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                    causal: bool = True, block_q: int = 128,
+                    block_k: int = 128, interpret: bool = True) -> jnp.ndarray:
+    """q: (B, H, Sq, D); k, v: (B, H, Sk, D) (GQA expansion handled in ops.py)."""
+    B, H, Sq, D = q.shape
+    Sk = k.shape[2]
+    block_q = min(block_q, Sq)
+    block_k = min(block_k, Sk)
+    nq = -(-Sq // block_q)
+    nk = -(-Sk // block_k)
+    Sq_p, Sk_p = nq * block_q, nk * block_k
+    if Sq_p != Sq:
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, Sq_p - Sq), (0, 0)))
+    if Sk_p != Sk:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, Sk_p - Sk), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, Sk_p - Sk), (0, 0)))
+    grid = (B, H, nq, nk)
+    kern = functools.partial(
+        _fa_kernel, causal=causal, scale=1.0 / math.sqrt(D),
+        block_q=block_q, block_k=block_k, num_k_blocks=nk, seq_k=Sk)
+    out = pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, D), lambda b, h, i, j: (b, h, i, 0)),
+            pl.BlockSpec((1, 1, block_k, D), lambda b, h, i, j: (b, h, j, 0)),
+            pl.BlockSpec((1, 1, block_k, D), lambda b, h, i, j: (b, h, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, D), lambda b, h, i, j: (b, h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, Sq_p, D), q.dtype),
+        scratch_shapes=[
+            _vmem((block_q,), jnp.float32),       # m: running max
+            _vmem((block_q,), jnp.float32),       # l: running denom
+            _vmem((block_q, D), jnp.float32),     # acc: running numerator
+        ],
+        interpret=interpret,
+    )(q, k, v)
+    return out[:, :, :Sq]
+
+
+def _vmem(shape, dtype):
+    import jax.experimental.pallas.tpu as pltpu
+    return pltpu.VMEM(shape, dtype)

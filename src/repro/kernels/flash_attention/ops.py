@@ -1,0 +1,32 @@
+"""jit'd public wrapper: GQA layout adaptation + kernel/ref dispatch.
+
+The model's layout is (B, S, H, hd) with Kv <= H kv heads; the kernel works on
+(B, H, S, hd) with matched heads.  On CPU (this container) the kernel runs in
+interpret mode; on TPU set interpret=False.
+"""
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import flash_attention
+from .ref import attention_ref
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "use_kernel", "interpret"))
+def gqa_flash_attention(q, k, v, *, causal: bool = True,
+                        use_kernel: bool = True, interpret: bool = True):
+    """q: (B, S, H, hd); k, v: (B, S, Kv, hd) -> (B, S, H, hd)."""
+    B, S, H, hd = q.shape
+    Kv = k.shape[2]
+    G = H // Kv
+    qt = q.transpose(0, 2, 1, 3)                       # (B, H, S, hd)
+    kt = jnp.repeat(k.transpose(0, 2, 1, 3), G, axis=1)
+    vt = jnp.repeat(v.transpose(0, 2, 1, 3), G, axis=1)
+    fn = flash_attention if use_kernel else (
+        lambda a, b, c, causal, interpret=None: attention_ref(a, b, c, causal=causal))
+    if use_kernel:
+        o = flash_attention(qt, kt, vt, causal=causal, interpret=interpret)
+    else:
+        o = attention_ref(qt, kt, vt, causal=causal)
+    return o.transpose(0, 2, 1, 3)

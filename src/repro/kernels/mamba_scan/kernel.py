@@ -1,0 +1,91 @@
+"""Chunked selective-scan (Mamba-1) TPU kernel.
+
+Grid (batch, d_inner blocks, time chunks), time innermost so the SSM state
+h (block_d, N) persists in VMEM scratch across chunks — the kernel never
+materializes the (B, L, d_inner, N) tensor that makes the naive lowering
+memory-bound (this is the core insight of the original Mamba kernel, re-blocked
+for VMEM/VPU instead of SRAM/warps; DESIGN.md §3).
+
+Within a chunk the recurrence h_t = a_t*h + b_t runs as a fori_loop over time
+steps (VPU elementwise; N=16 lanes).  y_t = C_t . h_t + D*x_t is written per
+chunk.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _scan_kernel(x_ref, dt_ref, A_ref, B_ref, C_ref, D_ref, o_ref, h_scr, *,
+                 chunk: int):
+    ti = pl.program_id(2)
+
+    @pl.when(ti == 0)
+    def _init():
+        h_scr[...] = jnp.zeros_like(h_scr)
+
+    x = x_ref[0].astype(jnp.float32)             # (chunk, bd)
+    dt = dt_ref[0].astype(jnp.float32)           # (chunk, bd)
+    A = A_ref[...].astype(jnp.float32)           # (bd, N)
+    Bt = B_ref[0].astype(jnp.float32)            # (chunk, N)
+    Ct = C_ref[0].astype(jnp.float32)            # (chunk, N)
+    Dw = D_ref[...].astype(jnp.float32)          # (bd,)
+
+    def step(t, carry):
+        h, ys = carry
+        a = jnp.exp(dt[t][:, None] * A)                       # (bd, N)
+        b = (dt[t] * x[t])[:, None] * Bt[t][None, :]          # (bd, N)
+        h = a * h + b
+        y = jnp.sum(h * Ct[t][None, :], axis=1) + Dw * x[t]   # (bd,)
+        ys = jax.lax.dynamic_update_slice(ys, y[None], (t, 0))
+        return h, ys
+
+    h0 = h_scr[...]
+    ys0 = jnp.zeros((chunk, x.shape[1]), jnp.float32)
+    h_f, ys = jax.lax.fori_loop(0, chunk, step, (h0, ys0))
+    h_scr[...] = h_f
+    o_ref[0] = ys.astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "block_d", "interpret"))
+def mamba_scan(x, delta, A, B_t, C_t, D, *, chunk: int = 64,
+               block_d: int = 512, interpret: bool = True):
+    """x/delta: (B, L, Di); A: (Di, N); B_t/C_t: (B, L, N); D: (Di,).
+    Returns y: (B, L, Di).  L must pad to a chunk multiple (handled here)."""
+    Bb, L, Di = x.shape
+    N = A.shape[1]
+    chunk = min(chunk, L)
+    nt = -(-L // chunk)
+    Lp = nt * chunk
+    block_d = min(block_d, Di)
+    nd = -(-Di // block_d)
+    if Lp != L:
+        pad = ((0, 0), (0, Lp - L), (0, 0))
+        x, delta = jnp.pad(x, pad), jnp.pad(delta, pad)
+        B_t, C_t = jnp.pad(B_t, pad), jnp.pad(C_t, pad)
+    grid = (Bb, nd, nt)
+    out = pl.pallas_call(
+        functools.partial(_scan_kernel, chunk=chunk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, chunk, block_d), lambda b, d, t: (b, t, d)),
+            pl.BlockSpec((1, chunk, block_d), lambda b, d, t: (b, t, d)),
+            pl.BlockSpec((block_d, N), lambda b, d, t: (d, 0)),
+            pl.BlockSpec((1, chunk, N), lambda b, d, t: (b, t, 0)),
+            pl.BlockSpec((1, chunk, N), lambda b, d, t: (b, t, 0)),
+            pl.BlockSpec((block_d,), lambda b, d, t: (d,)),
+        ],
+        out_specs=pl.BlockSpec((1, chunk, block_d), lambda b, d, t: (b, t, d)),
+        out_shape=jax.ShapeDtypeStruct((Bb, Lp, Di), x.dtype),
+        scratch_shapes=[_vmem((block_d, N), jnp.float32)],
+        interpret=interpret,
+    )(x, delta, A, B_t, C_t, D)
+    return out[:, :L]
+
+
+def _vmem(shape, dtype):
+    import jax.experimental.pallas.tpu as pltpu
+    return pltpu.VMEM(shape, dtype)

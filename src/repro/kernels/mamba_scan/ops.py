@@ -1,0 +1,16 @@
+"""jit'd wrapper selecting kernel vs oracle."""
+import functools
+
+import jax
+
+from .kernel import mamba_scan
+from .ref import mamba_scan_ref
+
+
+@functools.partial(jax.jit, static_argnames=("use_kernel", "chunk", "interpret"))
+def selective_scan(x, delta, A, B_t, C_t, D, use_kernel: bool = True,
+                   chunk: int = 64, interpret: bool = True):
+    if use_kernel:
+        return mamba_scan(x, delta, A, B_t, C_t, D, chunk=chunk,
+                          interpret=interpret)
+    return mamba_scan_ref(x, delta, A, B_t, C_t, D)

@@ -1,0 +1,6 @@
+"""Pure-jnp oracle: the sequential selective scan (repro.models.mamba)."""
+from repro.models.mamba import selective_scan_ref
+
+
+def mamba_scan_ref(x, delta, A, B_t, C_t, D):
+    return selective_scan_ref(x, delta, A, B_t, C_t, D)

@@ -1,0 +1,15 @@
+"""jit'd wrapper selecting kernel vs oracle."""
+import functools
+
+import jax
+
+from .kernel import rmsnorm
+from .ref import rmsnorm_ref
+
+
+@functools.partial(jax.jit, static_argnames=("eps", "use_kernel", "interpret"))
+def fused_rmsnorm(x, w, eps: float = 1e-6, use_kernel: bool = True,
+                  interpret: bool = True):
+    if use_kernel:
+        return rmsnorm(x, w, eps=eps, interpret=interpret)
+    return rmsnorm_ref(x, w, eps)

@@ -1,0 +1,10 @@
+"""Pure-jnp oracle for the fused RMSNorm kernel (same as models.layers.rms_norm)."""
+import jax
+import jax.numpy as jnp
+
+
+def rmsnorm_ref(x, w, eps: float = 1e-6):
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    return ((x32 * jax.lax.rsqrt(var + eps)) * w.astype(jnp.float32)).astype(dt)

@@ -1,0 +1,191 @@
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+MUST be run as a module entry point:
+    PYTHONPATH=src python -m repro.launch.dryrun --arch qwen2-7b --shape train_4k
+    PYTHONPATH=src python -m repro.launch.dryrun --all --multi-pod --out experiments/dryrun
+
+Emits one JSON artifact per cell with memory_analysis, cost_analysis,
+collective bytes (HLO-parsed, trip-count aware) and the three roofline terms.
+"""
+# The dry-run (and ONLY the dry-run) needs 512 placeholder devices; jax locks
+# the device count at first init, so these two lines precede ANY other import.
+import os
+os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=512 "
+                           + os.environ.get("XLA_FLAGS", ""))
+
+import argparse          # noqa: E402
+import json              # noqa: E402
+import time              # noqa: E402
+import traceback         # noqa: E402
+from pathlib import Path  # noqa: E402
+
+import jax               # noqa: E402
+import numpy as np       # noqa: E402
+from jax.sharding import PartitionSpec as P  # noqa: E402
+
+from ..configs.base import SHAPES, cells_for, get_config, list_configs  # noqa: E402
+from ..optim.adamw import AdamWConfig  # noqa: E402
+from ..parallel import sharding as sh  # noqa: E402
+from ..train.steps import make_decode_step, make_prefill_step, make_train_step  # noqa: E402
+from . import hlo_analysis as H  # noqa: E402
+from .mesh import make_production_mesh  # noqa: E402
+from .specs import cache_specs, input_specs, train_state_specs  # noqa: E402
+
+
+def lower_cell(arch: str, shape_name: str, multi_pod: bool,
+               save_hlo: bool = False, overrides: dict | None = None):
+    import dataclasses
+    cfg = get_config(arch)
+    if overrides:
+        cfg = dataclasses.replace(cfg, **overrides)
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    opt_cfg = AdamWConfig(state_dtype=cfg.opt_state_dtype)
+
+    p_sh = sh.to_shardings(sh.param_pspecs(cfg, mesh), mesh)
+    o_sh = sh.to_shardings(sh.opt_pspecs(cfg, mesh), mesh)
+    b_sh = sh.to_shardings(sh.batch_pspecs(cfg, shape, mesh), mesh)
+    params_spec, opt_spec = train_state_specs(cfg, opt_cfg)
+    repl = jax.sharding.NamedSharding(mesh, P())
+
+    with mesh, sh.activation_mesh(mesh):
+        ba = sh.batch_axes(mesh)
+        bsz = int(np.prod([mesh.shape[a] for a in ba]))
+        if shape.global_batch % bsz == 0:
+            baxis = ba
+        elif shape.global_batch % mesh.shape["data"] == 0:
+            baxis = ("data",)
+        else:
+            baxis = None
+        if shape.kind == "train":
+            step = make_train_step(cfg, opt_cfg)
+            fn = jax.jit(step,
+                         in_shardings=(p_sh, o_sh, b_sh),
+                         out_shardings=(p_sh, o_sh, repl),
+                         donate_argnums=(0, 1))
+            lowered = fn.lower(params_spec, opt_spec, input_specs(cfg, shape))
+        elif shape.kind == "prefill":
+            step = make_prefill_step(cfg, max_len=shape.seq_len)
+            if cfg.causal:
+                c_sh = sh.to_shardings(sh.cache_pspecs(cfg, shape, mesh), mesh)
+                logit_sh = sh.to_shardings(P(baxis, None), mesh)
+                out_sh = (logit_sh, c_sh)
+            else:  # encoder-only: all-position logits, no cache
+                logit_sh = sh.to_shardings(P(baxis, None, None), mesh)
+                out_sh = (logit_sh, None)
+            fn = jax.jit(step, in_shardings=(p_sh, b_sh),
+                         out_shardings=out_sh)
+            lowered = fn.lower(params_spec, input_specs(cfg, shape))
+        else:  # decode
+            step = make_decode_step(cfg)
+            c_sh = sh.to_shardings(sh.cache_pspecs(cfg, shape, mesh), mesh)
+            ins = input_specs(cfg, shape)
+            tok_spec = P(baxis, None) if cfg.frontend != "none" else P(baxis)
+            tok_sh = sh.to_shardings(tok_spec, mesh)
+            logit_sh = sh.to_shardings(P(baxis, None), mesh)
+            fn = jax.jit(step,
+                         in_shardings=(p_sh, tok_sh, c_sh, repl),
+                         out_shardings=(logit_sh, c_sh),
+                         donate_argnums=(2,))
+            lowered = fn.lower(params_spec, ins["token"],
+                               cache_specs(cfg, shape), ins["cur_pos"])
+        t0 = time.time()
+        compiled = lowered.compile()
+        compile_s = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    hlo = compiled.as_text()
+    stats = H.analyze_hlo(hlo)    # trip-count-aware per-device accounting
+    n_chips = int(np.prod(list(mesh.shape.values())))
+    flops_dev = stats.flops
+    bytes_dev = stats.hbm_bytes
+    coll_dev = stats.total_collective_bytes
+    terms = H.roofline_terms(flops_dev, bytes_dev, coll_dev)
+
+    model_flops = _model_flops(cfg, shape)
+    result = dict(
+        arch=arch, shape=shape_name,
+        mesh=("2x16x16" if multi_pod else "16x16"), chips=n_chips,
+        compile_seconds=round(compile_s, 1),
+        memory=dict(
+            argument_bytes=getattr(mem, "argument_size_in_bytes", None),
+            output_bytes=getattr(mem, "output_size_in_bytes", None),
+            temp_bytes=getattr(mem, "temp_size_in_bytes", None),
+            peak_bytes=(getattr(mem, "temp_size_in_bytes", 0) or 0)
+            + (getattr(mem, "argument_size_in_bytes", 0) or 0),
+        ),
+        cost=dict(flops_per_device=flops_dev, bytes_per_device=bytes_dev,
+                  bytes_per_device_unfused_ub=stats.hbm_bytes_unfused,
+                  xla_cost_flops=float(cost.get("flops", 0.0)),
+                  xla_cost_bytes=float(cost.get("bytes accessed", 0.0))),
+        collectives=dict(bytes_by_kind=stats.collective_bytes,
+                         count_by_kind=stats.collective_counts,
+                         total_bytes_per_device=coll_dev),
+        roofline=terms,
+        model_flops=model_flops,
+        useful_flops_ratio=(model_flops / max(n_chips * flops_dev, 1.0)),
+        params=cfg.param_count(), active_params=cfg.active_param_count(),
+    )
+    if save_hlo:
+        result["hlo_len"] = len(hlo)
+    return result, hlo
+
+
+def _model_flops(cfg, shape) -> float:
+    """Analytic MODEL_FLOPS: 6*N_active*D for train; 2*N_active*D for fwd-only."""
+    tokens = shape.global_batch * (shape.seq_len if shape.kind != "decode" else 1)
+    n = cfg.active_param_count()
+    mult = 6.0 if shape.kind == "train" else 2.0
+    return mult * n * tokens
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--out", default="experiments/dryrun")
+    args = ap.parse_args()
+
+    out = Path(args.out)
+    out.mkdir(parents=True, exist_ok=True)
+    cells = []
+    archs = [a for a in list_configs() if a != "lm100m"] if (args.all or not args.arch) \
+        else [args.arch]
+    for arch in archs:
+        cfg = get_config(arch)
+        shapes = [s.name for s in cells_for(cfg)] if (args.all or not args.shape) \
+            else [args.shape]
+        for s in shapes:
+            meshes = [False, True] if args.both_meshes else [args.multi_pod]
+            for mp in meshes:
+                cells.append((arch, s, mp))
+
+    failures = 0
+    for arch, s, mp in cells:
+        tag = f"{arch}__{s}__{'2x16x16' if mp else '16x16'}"
+        path = out / f"{tag}.json"
+        if path.exists():
+            print(f"[skip] {tag}")
+            continue
+        print(f"[lower+compile] {tag} ...", flush=True)
+        try:
+            t0 = time.time()
+            result, hlo = lower_cell(arch, s, mp)
+            path.write_text(json.dumps(result, indent=1))
+            print(f"  ok in {time.time()-t0:.0f}s — dominant={result['roofline']['dominant']} "
+                  f"compute={result['roofline']['compute_s']:.4f}s "
+                  f"coll={result['roofline']['collective_s']:.4f}s", flush=True)
+        except Exception as e:
+            failures += 1
+            (out / f"{tag}.FAILED").write_text(traceback.format_exc())
+            print(f"  FAILED: {e}", flush=True)
+    print(f"done: {len(cells) - failures}/{len(cells)} cells passed")
+    return failures
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

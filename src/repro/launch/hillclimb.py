@@ -1,0 +1,54 @@
+"""§Perf hillclimb driver: re-lower one cell with a named variant and record
+before/after next to the baseline artifact.
+
+    PYTHONPATH=src python -m repro.launch.hillclimb --arch kimi-k2-1t-a32b \
+        --shape train_4k --variant fp8_dispatch \
+        --overrides '{"moe_dispatch_dtype": "float8_e4m3fn"}'
+"""
+import os
+os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=512 "
+                           + os.environ.get("XLA_FLAGS", ""))
+
+import argparse  # noqa: E402
+import json      # noqa: E402
+import time      # noqa: E402
+from pathlib import Path  # noqa: E402
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--variant", required=True)
+    ap.add_argument("--overrides", default="{}")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--out", default="experiments/perf")
+    args = ap.parse_args()
+
+    from .dryrun import lower_cell
+    out = Path(args.out)
+    out.mkdir(parents=True, exist_ok=True)
+    overrides = json.loads(args.overrides)
+    tag = f"{args.arch}__{args.shape}__{'2x16x16' if args.multi_pod else '16x16'}"
+    t0 = time.time()
+    result, _ = lower_cell(args.arch, args.shape, args.multi_pod,
+                           overrides=overrides or None)
+    result["variant"] = args.variant
+    result["overrides"] = overrides
+    path = out / f"{tag}__{args.variant}.json"
+    path.write_text(json.dumps(result, indent=1))
+    base_path = Path("experiments/dryrun") / f"{tag}.json"
+    line = (f"{args.variant}: compute={result['roofline']['compute_s']:.4f}s "
+            f"memory={result['roofline']['memory_s']:.4f}s "
+            f"collective={result['roofline']['collective_s']:.4f}s "
+            f"dominant={result['roofline']['dominant']} "
+            f"[{time.time() - t0:.0f}s]")
+    if base_path.exists():
+        b = json.loads(base_path.read_text())["roofline"]
+        line += (f"   (baseline: {b['compute_s']:.4f}/{b['memory_s']:.4f}"
+                 f"/{b['collective_s']:.4f} {b['dominant']})")
+    print(line)
+
+
+if __name__ == "__main__":
+    main()

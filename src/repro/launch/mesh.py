@@ -1,0 +1,19 @@
+"""Production meshes.  A function (not a module constant) so importing never
+touches jax device state."""
+from __future__ import annotations
+
+import jax
+
+__all__ = ["make_production_mesh", "make_local_mesh"]
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 v5e pod (256 chips), or 2 pods = 512 chips with a 'pod' axis."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_local_mesh(data: int = 1, model: int = 1):
+    """Small mesh over whatever devices exist (tests / CPU runs)."""
+    return jax.make_mesh((data, model), ("data", "model"))

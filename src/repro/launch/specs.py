@@ -1,0 +1,54 @@
+"""ShapeDtypeStruct stand-ins for every model input (no device allocation).
+
+``input_specs(cfg, shape)`` gives the batch for a training step; for serving
+it gives the request batch (prefill) or the (token, caches, pos) operands
+(decode).  Dtypes are weak-type-correct and shardable.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig, ShapeSpec
+from ..models import model as M
+from ..optim.adamw import AdamWConfig, adamw_init
+
+__all__ = ["input_specs", "train_state_specs", "cache_specs"]
+
+Sds = jax.ShapeDtypeStruct
+
+
+def _dt(name: str):
+    return dict(float32=jnp.float32, bfloat16=jnp.bfloat16)[name]
+
+
+def input_specs(cfg: ArchConfig, shape: ShapeSpec) -> Dict[str, Any]:
+    B, S = shape.global_batch, shape.seq_len
+    if shape.kind == "decode":
+        if cfg.frontend != "none":
+            tok = Sds((B, cfg.d_model), _dt(cfg.compute_dtype))
+        else:
+            tok = Sds((B,), jnp.int32)
+        return dict(token=tok, cur_pos=Sds((), jnp.int32))
+    batch: Dict[str, Any] = {}
+    if cfg.frontend != "none":
+        batch["embeds"] = Sds((B, S, cfg.d_model), _dt(cfg.compute_dtype))
+    else:
+        batch["tokens"] = Sds((B, S), jnp.int32)
+    if shape.kind == "train":
+        batch["labels"] = Sds((B, S), jnp.int32)
+    return batch
+
+
+def train_state_specs(cfg: ArchConfig, opt_cfg: AdamWConfig) -> Tuple[Any, Any]:
+    """(params, opt_state) ShapeDtypeStructs via eval_shape (no allocation)."""
+    params = jax.eval_shape(lambda: M.init_params(cfg, jax.random.PRNGKey(0)))
+    opt = jax.eval_shape(lambda p: adamw_init(p, opt_cfg), params)
+    return params, opt
+
+
+def cache_specs(cfg: ArchConfig, shape: ShapeSpec):
+    B = shape.global_batch
+    return jax.eval_shape(lambda: M.init_cache(cfg, B, shape.seq_len))

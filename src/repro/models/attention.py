@@ -1,0 +1,133 @@
+"""GQA/MQA attention with causal masking, sliding windows, and a KV cache.
+
+The train/prefill path is a *block-chunked online-softmax* (flash-style) in
+pure JAX: it never materializes the (S, S) score matrix, skips fully-masked KV
+blocks (causal/window block pruning happens at trace time, so the HLO contains
+only the live blocks), and is numerically the oracle for the Pallas
+``flash_attention`` kernel.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["chunked_attention", "decode_attention"]
+
+NEG_INF = -1e30
+
+
+def _block_mask(q_pos, k_pos, causal: bool, window: Optional[int]):
+    m = jnp.ones((q_pos.shape[0], k_pos.shape[0]), dtype=bool)
+    if causal:
+        m &= q_pos[:, None] >= k_pos[None, :]
+    if window is not None:
+        m &= q_pos[:, None] - k_pos[None, :] < window
+    return m
+
+
+def chunked_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                      causal: bool = True, window: Optional[int] = None,
+                      q_chunk: int = 512, k_chunk: int = 512,
+                      q_offset: int = 0) -> jnp.ndarray:
+    """q: (B, Sq, H, hd); k, v: (B, Sk, Kv, hd) with H % Kv == 0.
+
+    ``q_offset``: absolute position of q[0] (for prefill continuation).
+    Block pruning: KV blocks entirely outside the causal/window band of a
+    query block are skipped at trace time (no FLOPs in the HLO).
+    """
+    B, Sq, H, hd = q.shape
+    Sk, Kv = k.shape[1], k.shape[2]
+    G = H // Kv
+    scale = 1.0 / math.sqrt(hd)
+    q_chunk = min(q_chunk, Sq)
+    k_chunk = min(k_chunk, Sk)
+    nq, nk = -(-Sq // q_chunk), -(-Sk // k_chunk)
+    # pad to multiples
+    Sq_p, Sk_p = nq * q_chunk, nk * k_chunk
+    qp = jnp.pad(q, ((0, 0), (0, Sq_p - Sq), (0, 0), (0, 0)))
+    kp = jnp.pad(k, ((0, 0), (0, Sk_p - Sk), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, Sk_p - Sk), (0, 0), (0, 0)))
+    # (B, nk, kc, Kv, hd)
+    kb = kp.reshape(B, nk, k_chunk, Kv, hd)
+    vb = vp.reshape(B, nk, k_chunk, Kv, hd)
+
+    out_chunks = []
+    for qi in range(nq):
+        qc = qp[:, qi * q_chunk:(qi + 1) * q_chunk]              # (B, qc, H, hd)
+        qc = qc.reshape(B, q_chunk, Kv, G, hd)
+        q_lo = q_offset + qi * q_chunk
+        q_hi = q_lo + q_chunk - 1
+        # live KV blocks for this query block
+        live = []
+        for ki in range(nk):
+            k_lo, k_hi = ki * k_chunk, ki * k_chunk + k_chunk - 1
+            if causal and k_lo > q_hi:
+                continue                                          # future block
+            if window is not None and k_hi < q_lo - window + 1:
+                continue                                          # expired block
+            live.append(ki)
+        live_idx = jnp.array(live, dtype=jnp.int32)
+        kl = kb[:, live_idx]                                      # (B, L, kc, Kv, hd)
+        vl = vb[:, live_idx]
+
+        m0 = jnp.full((B, q_chunk, Kv, G), NEG_INF, dtype=jnp.float32)
+        l0 = jnp.zeros((B, q_chunk, Kv, G), dtype=jnp.float32)
+        acc0 = jnp.zeros((B, q_chunk, Kv, G, hd), dtype=jnp.float32)
+
+        q_pos = q_lo + jnp.arange(q_chunk)
+
+        def body(carry, inp):
+            m, l, acc = carry
+            kc_, vc_, ki_ = inp
+            s = jnp.einsum("bqkgd,bskd->bqkgs", qc, kc_,
+                           preferred_element_type=jnp.float32) * scale
+            k_pos = ki_ * k_chunk + jnp.arange(k_chunk)
+            mask = _block_mask(q_pos, k_pos, causal, window)      # (qc, kc)
+            mask &= (k_pos < Sk)[None, :]                         # padding
+            s = jnp.where(mask[None, :, None, None, :], s, NEG_INF)
+            m_new = jnp.maximum(m, s.max(axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + p.sum(axis=-1)
+            acc_new = acc * corr[..., None] + jnp.einsum(
+                "bqkgs,bskd->bqkgd", p.astype(vc_.dtype), vc_,
+                preferred_element_type=jnp.float32)
+            return (m_new, l_new, acc_new), None
+
+        # flash-attention-style backward: recompute block scores/probs instead
+        # of saving the stacked (L, B, qc, ..., kc) intermediates
+        (m, l, acc), _ = jax.lax.scan(
+            jax.checkpoint(body), (m0, l0, acc0),
+            (kl.swapaxes(0, 1), vl.swapaxes(0, 1), live_idx))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        out_chunks.append(out.reshape(B, q_chunk, H, hd))
+    o = jnp.concatenate(out_chunks, axis=1)[:, :Sq]
+    return o.astype(q.dtype)
+
+
+def decode_attention(q: jnp.ndarray, k_cache: jnp.ndarray, v_cache: jnp.ndarray,
+                     length: jnp.ndarray, *, window: Optional[int] = None
+                     ) -> jnp.ndarray:
+    """Single-position decode: q (B, 1, H, hd) against cache (B, S, Kv, hd).
+
+    ``length``: number of valid cache positions (scalar int array).
+    """
+    B, _, H, hd = q.shape
+    S, Kv = k_cache.shape[1], k_cache.shape[2]
+    G = H // Kv
+    qg = q.reshape(B, Kv, G, hd)
+    s = jnp.einsum("bkgd,bskd->bkgs", qg, k_cache,
+                   preferred_element_type=jnp.float32) / math.sqrt(hd)
+    pos = jnp.arange(S)
+    valid = pos < length
+    if window is not None:
+        valid &= pos >= length - window
+    s = jnp.where(valid[None, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgs,bskd->bkgd", p.astype(v_cache.dtype), v_cache,
+                   preferred_element_type=jnp.float32)
+    return o.reshape(B, 1, H, hd).astype(q.dtype)

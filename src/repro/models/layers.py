@@ -1,0 +1,77 @@
+"""Elemental layers: RMSNorm, RoPE (incl. M-RoPE), gated MLPs.
+
+Pure functions over explicit param pytrees.  The pure-jnp implementations here
+are also the reference oracles for the Pallas kernels in repro.kernels.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["rms_norm", "rope_angles", "apply_rope", "mrope_positions",
+           "gated_mlp", "init_linear", "init_norm"]
+
+
+def rms_norm(x: jnp.ndarray, weight: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    return ((x32 * jax.lax.rsqrt(var + eps)) * weight.astype(jnp.float32)).astype(dt)
+
+
+def rope_angles(positions: jnp.ndarray, head_dim: int, theta: float,
+                sections: Optional[Tuple[int, ...]] = None) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """cos/sin tables.
+
+    positions: (B, S) for standard RoPE, or (3, B, S) for M-RoPE where the
+    three planes are (temporal, height, width) and ``sections`` splits the
+    head_dim/2 frequency bands across planes (qwen2-vl §2.1).
+    Returns cos/sin of shape (B, S, head_dim/2).
+    """
+    half = head_dim // 2
+    freqs = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    if positions.ndim == 2:      # standard
+        ang = positions[..., None].astype(jnp.float32) * freqs
+    else:                        # M-RoPE: pick the plane per frequency band
+        assert sections is not None and sum(sections) == half
+        plane = np.concatenate([np.full(s, i) for i, s in enumerate(sections)])
+        pos_per_band = positions[plane]                     # (half, B, S)
+        ang = jnp.moveaxis(pos_per_band, 0, -1).astype(jnp.float32) * freqs
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jnp.ndarray, cos: jnp.ndarray, sin: jnp.ndarray) -> jnp.ndarray:
+    """x: (B, S, H, head_dim); cos/sin: (B, S, head_dim/2). Rotate-half form."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    c = cos[:, :, None, :].astype(x.dtype)
+    s = sin[:, :, None, :].astype(x.dtype)
+    return jnp.concatenate([x1 * c - x2 * s, x2 * c + x1 * s], axis=-1)
+
+
+def mrope_positions(B: int, S: int, offset: int = 0) -> jnp.ndarray:
+    """Text-stream M-RoPE positions: all three planes share 1D positions."""
+    p = jnp.arange(offset, offset + S)[None, :].repeat(B, axis=0)
+    return jnp.stack([p, p, p], axis=0)
+
+
+def gated_mlp(x: jnp.ndarray, wg: jnp.ndarray, wu: jnp.ndarray, wd: jnp.ndarray,
+              act: str = "silu") -> jnp.ndarray:
+    """SwiGLU / GeGLU: down( act(x@wg) * (x@wu) )."""
+    g = x @ wg
+    g = jax.nn.silu(g) if act == "silu" else jax.nn.gelu(g, approximate=True)
+    return (g * (x @ wu)) @ wd
+
+
+def init_linear(key, shape, dtype, scale: Optional[float] = None):
+    fan_in = shape[-2] if len(shape) >= 2 else shape[0]
+    scale = scale if scale is not None else 1.0 / np.sqrt(fan_in)
+    return (jax.random.truncated_normal(key, -2, 2, shape, jnp.float32)
+            * scale).astype(dtype)
+
+
+def init_norm(shape, dtype):
+    return jnp.ones(shape, dtype=dtype)

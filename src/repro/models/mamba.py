@@ -1,0 +1,205 @@
+"""Mamba-1 selective SSM block (falcon-mamba / jamba substrate).
+
+Train/prefill path: lax.scan over time *chunks* with an associative scan
+inside each chunk — the (B, chunk, d_inner, N) working set is transient (this
+is exactly the blocking a TPU kernel wants; see kernels/mamba_scan).
+Decode path: single-step recurrence over (conv_state, ssm_state).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["mamba_params_shapes", "mamba_forward", "mamba_prefill",
+           "mamba_decode_step", "selective_scan_chunked", "selective_scan_ref"]
+
+
+# --------------------------------------------------------------------------
+# selective scan
+# --------------------------------------------------------------------------
+
+def _ssm_inputs(x, delta, A, B_t, C_t):
+    """a_t = exp(delta_t A) (B,L,Di,N); b_t = delta_t * B_t * x_t."""
+    a = jnp.exp(delta[..., None] * A[None, None])                 # (B,L,Di,N)
+    b = (delta * x)[..., None] * B_t[:, :, None, :]               # (B,L,Di,N)
+    return a, b
+
+
+def selective_scan_ref(x, delta, A, B_t, C_t, D) -> jnp.ndarray:
+    """Naive sequential oracle: h_t = a_t h_{t-1} + b_t; y_t = C_t.h_t + D x_t.
+
+    x/delta: (B, L, Di); A: (Di, N); B_t/C_t: (B, L, N); D: (Di,).
+    """
+    a, b = _ssm_inputs(x, delta, A, B_t, C_t)
+
+    def step(h, inp):
+        a_t, b_t, c_t = inp
+        h = a_t * h + b_t
+        y = jnp.einsum("bdn,bn->bd", h, c_t)
+        return h, y
+
+    B, L, Di = x.shape
+    h0 = jnp.zeros((B, Di, A.shape[1]), dtype=jnp.float32)
+    _, ys = jax.lax.scan(step, h0, (a.swapaxes(0, 1).astype(jnp.float32),
+                                    b.swapaxes(0, 1).astype(jnp.float32),
+                                    C_t.swapaxes(0, 1).astype(jnp.float32)))
+    out = ys.swapaxes(0, 1) + x.astype(jnp.float32) * D[None, None]
+    return out.astype(x.dtype)
+
+
+def selective_scan_chunked(x, delta, A, B_t, C_t, D, chunk: int = 256,
+                           h0: Optional[jnp.ndarray] = None,
+                           scan_dtype=jnp.float32, impl: str = "assoc"
+                           ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Chunked scan; returns (y, h_final).  Same math as selective_scan_ref."""
+    B, L, Di = x.shape
+    N = A.shape[1]
+    chunk = min(chunk, L)
+    pad = (-L) % chunk
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+        delta = jnp.pad(delta, ((0, 0), (0, pad), (0, 0)))
+        B_t = jnp.pad(B_t, ((0, 0), (0, pad), (0, 0)))
+        C_t = jnp.pad(C_t, ((0, 0), (0, pad), (0, 0)))
+    Lp = L + pad
+    nc = Lp // chunk
+    xs = (x.reshape(B, nc, chunk, Di).swapaxes(0, 1),
+          delta.reshape(B, nc, chunk, Di).swapaxes(0, 1),
+          B_t.reshape(B, nc, chunk, N).swapaxes(0, 1),
+          C_t.reshape(B, nc, chunk, N).swapaxes(0, 1))
+    if h0 is None:
+        h0 = jnp.zeros((B, Di, N), dtype=jnp.float32)
+
+    def chunk_body(h, inp):
+        from ..parallel.act import BATCH, TP, constrain
+        xc, dc, bc, cc = inp
+        if impl == "seq":
+            # time-sequential: a_t/b_t built per step, y emitted directly;
+            # HBM traffic ~2-3 passes of (B,c,Di,N) (bwd residuals) instead
+            # of the associative scan's ~12
+            def step(hh, s_inp):
+                x_t, d_t, bt, ct = s_inp                     # (B,Di),(B,Di),(B,N),(B,N)
+                a_t = jnp.exp(d_t[..., None].astype(jnp.float32) * A[None])
+                b_t = (d_t * x_t)[..., None].astype(jnp.float32) \
+                    * bt[:, None, :].astype(jnp.float32)
+                hh = a_t * hh + b_t
+                y_t = jnp.einsum("bdn,bn->bd", hh, ct.astype(jnp.float32))
+                return hh, y_t
+            h_f, ys = jax.lax.scan(
+                step, h, (xc.swapaxes(0, 1), dc.swapaxes(0, 1),
+                          bc.swapaxes(0, 1), cc.swapaxes(0, 1)))
+            return h_f, constrain(ys.swapaxes(0, 1), BATCH, None, TP)
+        a, b = _ssm_inputs(xc, dc, A, bc, cc)
+        a = constrain(a.astype(scan_dtype), BATCH, None, TP, None)
+        b = constrain(b.astype(scan_dtype), BATCH, None, TP, None)
+
+        def combine(u, v):
+            (a1, b1), (a2, b2) = u, v
+            return a1 * a2, a2 * b1 + b2
+
+        a_cum, b_cum = jax.lax.associative_scan(combine, (a, b), axis=1)
+        h_t = constrain(a_cum.astype(jnp.float32) * h[:, None]
+                        + b_cum.astype(jnp.float32),              # (B,c,Di,N)
+                        BATCH, None, TP, None)
+        y = jnp.einsum("bcdn,bcn->bcd", h_t, cc.astype(jnp.float32))
+        return h_t[:, -1], constrain(y, BATCH, None, TP)
+
+    h_final, ys = jax.lax.scan(chunk_body, h0, xs)
+    y = ys.swapaxes(0, 1).reshape(B, Lp, Di)[:, :L]
+    out = y + x[:, :L].astype(jnp.float32) * D[None, None]
+    return out.astype(x.dtype), h_final
+
+
+# --------------------------------------------------------------------------
+# full mamba block
+# --------------------------------------------------------------------------
+
+def mamba_params_shapes(cfg) -> Dict[str, tuple]:
+    D, Di, N, R, K = (cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.dt_rank,
+                      cfg.ssm_conv)
+    return dict(in_proj=(D, 2 * Di), conv_w=(K, Di), conv_b=(Di,),
+                x_proj=(Di, R + 2 * N), dt_proj=(R, Di), dt_bias=(Di,),
+                A_log=(Di, N), D=(Di,), out_proj=(Di, D), norm=(D,))
+
+
+def _causal_conv(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray,
+                 state: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """Depthwise causal conv along time via K shifted adds. x: (B, L, Di)."""
+    K = w.shape[0]
+    if state is not None:                       # prepend cached context
+        x_ext = jnp.concatenate([state, x], axis=1)
+    else:
+        x_ext = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    L = x.shape[1]
+    y = jnp.zeros_like(x, dtype=jnp.float32)
+    for k in range(K):
+        y = y + x_ext[:, k:k + L].astype(jnp.float32) * w[k][None, None]
+    return (y + b[None, None]).astype(x.dtype)
+
+
+def _ssm_projections(params, u, cfg):
+    N, R = cfg.ssm_state, cfg.dt_rank
+    proj = u @ params["x_proj"]                                   # (B,L,R+2N)
+    dt, B_t, C_t = jnp.split(proj, [R, R + N], axis=-1)
+    delta = jax.nn.softplus(dt @ params["dt_proj"] + params["dt_bias"])
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))
+    return delta, A, B_t, C_t
+
+
+def mamba_forward(params: Dict, x: jnp.ndarray, cfg) -> jnp.ndarray:
+    """x: (B, L, D) -> (B, L, D)."""
+    from ..parallel.act import BATCH, TP, constrain
+    Di = cfg.d_inner
+    xz = x @ params["in_proj"]
+    u, z = jnp.split(xz, [Di], axis=-1)
+    u = constrain(u, BATCH, None, TP)
+    z = constrain(z, BATCH, None, TP)
+    u = jax.nn.silu(_causal_conv(u, params["conv_w"], params["conv_b"]))
+    delta, A, B_t, C_t = _ssm_projections(params, u, cfg)
+    sdt = dict(float32=jnp.float32, bfloat16=jnp.bfloat16)[
+        getattr(cfg, "ssm_scan_dtype", "float32")]
+    y, _ = selective_scan_chunked(u, delta, A, B_t, C_t,
+                                  params["D"].astype(jnp.float32),
+                                  chunk=cfg.mamba_chunk, scan_dtype=sdt,
+                                  impl=getattr(cfg, "ssm_impl", "assoc"))
+    return (y * jax.nn.silu(z)) @ params["out_proj"]
+
+
+def mamba_prefill(params: Dict, x: jnp.ndarray, cfg) -> Tuple[jnp.ndarray, Dict]:
+    """Forward over the prompt, returning the decode cache."""
+    Di, K = cfg.d_inner, cfg.ssm_conv
+    xz = x @ params["in_proj"]
+    u, z = jnp.split(xz, [Di], axis=-1)
+    conv_state = u[:, -(K - 1):, :]                               # raw inputs tail
+    uc = jax.nn.silu(_causal_conv(u, params["conv_w"], params["conv_b"]))
+    delta, A, B_t, C_t = _ssm_projections(params, uc, cfg)
+    y, h_final = selective_scan_chunked(uc, delta, A, B_t, C_t,
+                                        params["D"].astype(jnp.float32),
+                                        chunk=cfg.mamba_chunk)
+    out = (y * jax.nn.silu(z)) @ params["out_proj"]
+    return out, dict(conv=conv_state, ssm=h_final)
+
+
+def mamba_decode_step(params: Dict, x: jnp.ndarray, cache: Dict, cfg
+                      ) -> Tuple[jnp.ndarray, Dict]:
+    """x: (B, 1, D); cache: {conv: (B, K-1, Di), ssm: (B, Di, N)}."""
+    Di = cfg.d_inner
+    xz = x @ params["in_proj"]
+    u, z = jnp.split(xz, [Di], axis=-1)
+    conv_in = jnp.concatenate([cache["conv"], u], axis=1)        # (B, K, Di)
+    w = params["conv_w"]
+    uc = jnp.einsum("bkd,kd->bd", conv_in.astype(jnp.float32),
+                    w.astype(jnp.float32)) + params["conv_b"]
+    u1 = jax.nn.silu(uc)[:, None]                                 # (B,1,Di)
+    delta, A, B_t, C_t = _ssm_projections(params, u1, cfg)
+    a = jnp.exp(delta[..., None] * A[None, None])[:, 0]           # (B,Di,N)
+    b = ((delta * u1)[..., None] * B_t[:, :, None, :])[:, 0]
+    h = a.astype(jnp.float32) * cache["ssm"] + b.astype(jnp.float32)
+    y = jnp.einsum("bdn,bn->bd", h, C_t[:, 0].astype(jnp.float32))
+    y = (y[:, None] + u1.astype(jnp.float32)
+         * params["D"][None, None]).astype(x.dtype)
+    out = (y * jax.nn.silu(z)) @ params["out_proj"]
+    new_cache = dict(conv=conv_in[:, 1:], ssm=h)
+    return out, new_cache

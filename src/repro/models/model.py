@@ -1,0 +1,220 @@
+"""LM model wrapper: params init, forward, chunked loss, prefill/decode."""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs.base import ArchConfig
+from ..parallel.act import BATCH, TP, constrain
+from .layers import init_linear, init_norm, mrope_positions, rope_angles
+from .transformer import (block_param_shapes, blocks_decode, blocks_forward,
+                          blocks_prefill, init_block_cache)
+
+__all__ = ["param_shapes", "init_params", "forward_hidden", "loss_fn",
+           "prefill", "decode_step", "init_cache", "make_rope"]
+
+
+def _dt(name: str):
+    return dict(float32=jnp.float32, bfloat16=jnp.bfloat16)[name]
+
+
+# --------------------------------------------------------------------------
+# parameters
+# --------------------------------------------------------------------------
+
+class Shape(tuple):
+    """Shape leaf marker (so pytree flattening stops at shape tuples)."""
+
+
+def _is_shape(x):
+    return isinstance(x, Shape)
+
+
+def param_shapes(cfg: ArchConfig) -> Dict[str, Any]:
+    """Nested dict of Shape leaves (leading repeat axis on block params)."""
+    R = cfg.n_repeats
+
+    def mark(tree):
+        if isinstance(tree, dict):
+            return {k: mark(v) for k, v in tree.items()}
+        return Shape((R, *tree))
+
+    blocks = [mark(block_param_shapes(cfg, spec)) for spec in cfg.pattern]
+    out = dict(embed=Shape((cfg.vocab_size, cfg.d_model)), blocks=blocks,
+               final_norm=Shape((cfg.d_model,)))
+    if not cfg.tie_embeddings:
+        out["head"] = Shape((cfg.d_model, cfg.vocab_size))
+    # strip the repeat axis from top-level (non-block) entries
+    out["embed"] = Shape((cfg.vocab_size, cfg.d_model))
+    out["final_norm"] = Shape((cfg.d_model,))
+    return out
+
+
+_BIAS_NAMES = {"bq", "bk", "bv", "conv_b", "dt_bias"}
+
+
+def init_params(cfg: ArchConfig, key) -> Dict[str, Any]:
+    dtype = _dt(cfg.param_dtype)
+    shapes = param_shapes(cfg)
+    leaves, treedef = jax.tree.flatten(shapes, is_leaf=_is_shape)
+    keys = jax.random.split(key, len(leaves))
+    params = jax.tree.unflatten(
+        treedef, [init_linear(k, tuple(s), dtype) for k, s in zip(keys, leaves)])
+    return _fix_special_init(params, cfg)
+
+
+def _fix_special_init(params, cfg):
+    def walk(d, name=""):
+        if isinstance(d, dict):
+            return {k: walk(v, k) for k, v in d.items()}
+        if isinstance(d, (list, tuple)):
+            return type(d)(walk(v, name) for v in d)
+        if name.startswith("norm") or name == "final_norm":
+            return jnp.ones_like(d)
+        if name in _BIAS_NAMES:
+            return jnp.zeros_like(d)
+        if name == "A_log":   # mamba: A = -exp(A_log); A_log = log(1..N)
+            N = d.shape[-1]
+            base = jnp.log(jnp.arange(1, N + 1, dtype=jnp.float32))
+            return jnp.broadcast_to(base, d.shape).astype(jnp.float32)
+        if name == "D":
+            return jnp.ones(d.shape, dtype=jnp.float32)
+        if name == "embed":
+            return (d / jnp.maximum(jnp.std(d), 1e-6) * 0.02).astype(d.dtype)
+        return d
+    return walk(params)
+
+
+# --------------------------------------------------------------------------
+# rope helper
+# --------------------------------------------------------------------------
+
+def make_rope(cfg: ArchConfig, B: int, S: int, offset=0):
+    if not cfg.causal:
+        return None                      # encoder-only: frontend supplies pos info
+    if cfg.mrope_sections is not None:
+        pos = mrope_positions(B, S, 0) + offset
+        return rope_angles(pos, cfg.head_dim, cfg.rope_theta, cfg.mrope_sections)
+    if np.isscalar(offset) or getattr(offset, "ndim", 0) == 0:
+        pos = jnp.arange(S)[None, :].repeat(B, axis=0) + offset
+    else:
+        pos = offset[:, None] + jnp.arange(S)[None, :]
+    return rope_angles(pos, cfg.head_dim, cfg.rope_theta)
+
+
+# --------------------------------------------------------------------------
+# forward / loss
+# --------------------------------------------------------------------------
+
+def _embed_in(params, batch, cfg):
+    dtype = _dt(cfg.compute_dtype)
+    if "embeds" in batch:                     # stub frontends (vlm/audio)
+        return constrain(batch["embeds"].astype(dtype), BATCH, None, None)
+    tok = batch["tokens"]
+    return constrain(params["embed"].astype(dtype)[tok], BATCH, None, None)
+
+
+def forward_hidden(params, batch, cfg) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    x = _embed_in(params, batch, cfg)
+    B, S, _ = x.shape
+    rope = make_rope(cfg, B, S)
+    h, aux = blocks_forward(list(params["blocks"]), x, cfg, rope)
+    return h, aux
+
+
+def _head_weight(params, cfg):
+    if cfg.tie_embeddings:
+        return params["embed"].T
+    return params["head"]
+
+
+def loss_fn(params, batch, cfg) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    """Sequence-chunked softmax xent (never materializes (B, S, V))."""
+    from .layers import rms_norm
+    h, aux = forward_hidden(params, batch, cfg)
+    h = rms_norm(h, params["final_norm"], cfg.norm_eps)
+    labels = batch["labels"]
+    B, S, D = h.shape
+    V = cfg.vocab_size
+    c = min(cfg.loss_chunk, S)
+    pad = (-S) % c
+    if pad:
+        h = jnp.pad(h, ((0, 0), (0, pad), (0, 0)))
+        labels = jnp.pad(labels, ((0, 0), (0, pad)), constant_values=-1)
+    nc = (S + pad) // c
+    hw = _head_weight(params, cfg)
+
+    def chunk(carry, inp):
+        hs, ls = inp                                  # (B, c, D), (B, c)
+        logits = (hs @ hw.astype(hs.dtype)).astype(jnp.float32)
+        logits = constrain(logits, BATCH, None, TP)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        tgt = jnp.take_along_axis(logits, jnp.maximum(ls, 0)[..., None],
+                                  axis=-1)[..., 0]
+        valid = ls >= 0
+        nll = jnp.where(valid, lse - tgt, 0.0)
+        return (carry[0] + nll.sum(), carry[1] + valid.sum()), None
+
+    body = chunk
+    if cfg.remat:
+        body = jax.checkpoint(chunk)
+    (tot, cnt), _ = jax.lax.scan(
+        body, (jnp.float32(0.0), jnp.int32(0)),
+        (h.reshape(B, nc, c, D).swapaxes(0, 1), labels.reshape(B, nc, c).swapaxes(0, 1)))
+    loss = tot / jnp.maximum(cnt, 1)
+    total = loss + cfg.router_aux_coef * aux
+    return total, dict(loss=loss, aux=aux, tokens=cnt)
+
+
+# --------------------------------------------------------------------------
+# serving: prefill + decode
+# --------------------------------------------------------------------------
+
+def init_cache(cfg: ArchConfig, B: int, max_len: int) -> List[Dict]:
+    dtype = _dt(cfg.compute_dtype)
+    R = cfg.n_repeats
+    caches = []
+    for spec in cfg.pattern:
+        c = init_block_cache(cfg, spec, B, max_len, dtype)
+        caches.append(jax.tree.map(
+            lambda a: jnp.broadcast_to(a, (R, *a.shape)).copy() if a.ndim else a, c))
+    return caches
+
+
+def prefill(params, batch, cfg, max_len: int):
+    """Returns (last-position logits, caches).  Encoder-only: (all logits, None)."""
+    from .layers import rms_norm
+    x = _embed_in(params, batch, cfg)
+    B, S, _ = x.shape
+    rope = make_rope(cfg, B, S)
+    if not cfg.causal:
+        h, _ = blocks_forward(list(params["blocks"]), x, cfg, rope)
+        h = rms_norm(h, params["final_norm"], cfg.norm_eps)
+        logits = (h @ _head_weight(params, cfg).astype(h.dtype)).astype(jnp.float32)
+        return logits, None
+    h, caches = blocks_prefill(list(params["blocks"]), x, cfg, rope, max_len)
+    h = rms_norm(h[:, -1:], params["final_norm"], cfg.norm_eps)
+    logits = (h @ _head_weight(params, cfg).astype(h.dtype)).astype(jnp.float32)
+    return logits[:, 0], caches
+
+
+def decode_step(params, token, caches, cur_pos, cfg):
+    """token: (B,) int32 (or (B, D) embeds for stub frontends);
+    cur_pos: scalar int32.  Returns (logits (B, V), new caches)."""
+    from .layers import rms_norm
+    dtype = _dt(cfg.compute_dtype)
+    if token.ndim == 2:                    # stub frontend embeds
+        x = token.astype(dtype)[:, None, :]
+    else:
+        x = params["embed"].astype(dtype)[token][:, None, :]
+    B = x.shape[0]
+    rope = make_rope(cfg, B, 1, offset=cur_pos)
+    h, new_caches = blocks_decode(list(params["blocks"]), caches, x, cfg, rope,
+                                  cur_pos)
+    h = rms_norm(h, params["final_norm"], cfg.norm_eps)
+    logits = (h @ _head_weight(params, cfg).astype(h.dtype)).astype(jnp.float32)
+    return logits[:, 0], new_caches

@@ -1,0 +1,148 @@
+"""Token-choice top-k MoE with sort-based capacity dispatch (EP-shardable).
+
+Design (see DESIGN.md): routing is *local by construction* — tokens are
+grouped (group = one sequence / one data shard), each group routes its own
+tokens with per-group capacity C = ceil(S*k/E * cf).  The dispatched tensor
+(G, E, C, D) is sharded G->data, E->model, so GSPMD lowers the group->expert
+exchange to the EP all-to-all.  Dispatch/combine are *gathers/scatters*
+(O(tokens * k * D) memory traffic), NOT the dense one-hot einsum (which would
+cost O(tokens * E * C * D) FLOPs — untenable at E=384).
+
+``moe_ref`` is the capacity-unbounded dense oracle used by tests.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..parallel.act import BATCH, TP, constrain
+
+__all__ = ["moe_params_shapes", "moe_forward", "moe_ref", "capacity"]
+
+
+def capacity(tokens_per_group: int, n_experts: int, k: int, cf: float) -> int:
+    return max(1, math.ceil(tokens_per_group * k / n_experts * cf))
+
+
+def moe_params_shapes(cfg) -> Dict[str, tuple]:
+    D, E, F = cfg.d_model, cfg.n_experts, cfg.moe_d_ff
+    return dict(router=(D, E), wg=(E, D, F), wu=(E, D, F), wd=(E, F, D),
+                norm=(D,))
+
+
+def _route_group(x: jnp.ndarray, router_logits: jnp.ndarray, k: int, C: int,
+                 E: int) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """One group's routing.  x: (S, D); router_logits: (S, E).
+
+    Returns (dispatch_idx (E, C) into the S*k assignment list with sentinel
+    S*k, gate (S, k), token_of_assignment (S*k,), valid mask (E, C)).
+    """
+    S = x.shape[0]
+    probs = jax.nn.softmax(router_logits.astype(jnp.float32), axis=-1)
+    _, expert_idx = jax.lax.top_k(probs, k)                       # (S, k)
+    # gate values via gather (not top_k's value output): the gather VJP keeps
+    # the router gradient group-local, while top_k's VJP lowers to a scatter
+    # that GSPMD replicates across groups
+    gate = jnp.take_along_axis(probs, expert_idx, axis=-1)
+    gate = gate / jnp.maximum(gate.sum(-1, keepdims=True), 1e-9)  # renormalize
+    flat_expert = expert_idx.reshape(-1)                          # (S*k,)
+    # stable sort by expert id (ties keep token order)
+    order = jnp.argsort(flat_expert * (S * k) + jnp.arange(S * k))
+    sorted_expert = flat_expert[order]
+    counts = jnp.zeros(E, dtype=jnp.int32).at[flat_expert].add(1)
+    starts = jnp.cumsum(counts) - counts                          # exclusive
+    rank = jnp.arange(S * k) - starts[sorted_expert]              # within-expert slot
+    ok = rank < C
+    slot = jnp.where(ok, sorted_expert * C + rank, E * C)         # overflow -> dropped
+    dispatch = jnp.full(E * C + 1, S * k, dtype=jnp.int32)        # sentinel
+    dispatch = dispatch.at[slot].set(order)[: E * C].reshape(E, C)
+    valid = dispatch < S * k
+    return dispatch, gate, flat_expert, valid
+
+
+def moe_forward(params: Dict, x: jnp.ndarray, cfg) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x: (G, S, D) grouped tokens -> (y, aux_loss).
+
+    The vmapped routing is per-group; the expert matmul runs over the
+    dispatched (G, E, C, D) tensor.
+    """
+    G, S, D = x.shape
+    E, k = cfg.n_experts, cfg.experts_per_token
+    C = capacity(S, E, k, cfg.capacity_factor)
+    logits = x @ params["router"].astype(x.dtype)                 # (G, S, E)
+
+    dispatch, gate, flat_expert, valid = jax.vmap(
+        lambda xs, ls: _route_group(xs, ls, k, C, E))(x, logits)
+
+    # gather tokens into expert slots: token of assignment a is a // k
+    xpad = jnp.concatenate([x, jnp.zeros((G, 1, D), x.dtype)], axis=1)  # sentinel row
+    token_idx = jnp.where(valid, dispatch // k, S)                # (G, E, C)
+    xe = jnp.take_along_axis(xpad, token_idx.reshape(G, E * C)[..., None],
+                             axis=1).reshape(G, E, C, D)
+    # EP boundary: groups live on the batch axis, experts on the model axis —
+    # GSPMD lowers this resharding to the all-to-all.  Optional fp8 payload
+    # (per-slot max scale, DeepSeek-V3 style) halves the dispatch traffic.
+    fp8 = getattr(cfg, "moe_dispatch_dtype", "bfloat16").startswith("float8")
+    if fp8:
+        scale = jnp.max(jnp.abs(xe.astype(jnp.float32)), axis=-1,
+                        keepdims=True) / 448.0 + 1e-12        # e4m3 max
+        xq = (xe.astype(jnp.float32) / scale).astype(jnp.float8_e4m3fn)
+        xq = constrain(xq, BATCH, TP, None, None)
+        scale = constrain(scale, BATCH, TP, None, None)
+        xe = (xq.astype(jnp.float32) * scale).astype(x.dtype)
+    else:
+        xe = constrain(xe, BATCH, TP, None, None)
+
+    # expert FFN (E sharded over 'model'): (G,E,C,D) x (E,D,F)
+    act = jax.nn.silu if cfg.mlp_act == "silu" else (lambda a: jax.nn.gelu(a, approximate=True))
+    g = jnp.einsum("gecd,edf->gecf", xe, params["wg"].astype(x.dtype))
+    u = jnp.einsum("gecd,edf->gecf", xe, params["wu"].astype(x.dtype))
+    ye = jnp.einsum("gecf,efd->gecd", act(g) * u, params["wd"].astype(x.dtype))
+    # NOTE (§Perf, kimi hillclimb): constraining ye back to group-major here
+    # (the "textbook" EP return all-to-all) was MEASURED WORSE (53.7s vs 36.4s
+    # collective) — the padded (G,E,C,D) tensor is ~25% larger than the scatter
+    # payload GSPMD replicates instead.  Keep the expert-major constraint.
+    ye = constrain(ye, BATCH, TP, None, None)
+
+    # combine: scatter expert outputs back to tokens with gate weights
+    gate_flat = gate.reshape(G, S * k)                            # (G, S*k)
+    assign_gate = jnp.take_along_axis(
+        jnp.concatenate([gate_flat, jnp.zeros((G, 1), gate_flat.dtype)], axis=1),
+        jnp.where(valid, dispatch, S * k).reshape(G, E * C), axis=1
+    ).reshape(G, E, C)
+    # bf16 accumulation: each token sums <= k gate-weighted expert outputs, so
+    # bf16 is safe and HALVES the scatter's replicated-AR payload (§Perf)
+    y = jnp.zeros((G, S + 1, D), dtype=x.dtype)
+    y = y.at[jnp.arange(G)[:, None, None], token_idx, :].add(
+        ye * assign_gate[..., None].astype(ye.dtype))
+    y = y[:, :S]
+
+    # switch-style load-balance aux loss
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    me = probs.mean(axis=(0, 1))                                  # (E,)
+    one_hot = jax.nn.one_hot(flat_expert.reshape(G, S, k)[..., 0], E)
+    ce = one_hot.reshape(-1, E).mean(axis=0)
+    aux = E * jnp.sum(me * ce)
+    return y, aux
+
+
+def moe_ref(params: Dict, x: jnp.ndarray, cfg) -> jnp.ndarray:
+    """Capacity-unbounded dense oracle: every token goes to its top-k experts."""
+    G, S, D = x.shape
+    E, k = cfg.n_experts, cfg.experts_per_token
+    logits = x @ params["router"].astype(x.dtype)
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    gate, idx = jax.lax.top_k(probs, k)
+    gate = gate / jnp.maximum(gate.sum(-1, keepdims=True), 1e-9)
+    act = jax.nn.silu if cfg.mlp_act == "silu" else (lambda a: jax.nn.gelu(a, approximate=True))
+    # run every expert on every token (test sizes only)
+    g = jnp.einsum("gsd,edf->gsef", x, params["wg"].astype(x.dtype))
+    u = jnp.einsum("gsd,edf->gsef", x, params["wu"].astype(x.dtype))
+    ye = jnp.einsum("gsef,efd->gsed", act(g) * u, params["wd"].astype(x.dtype))
+    mask = jax.nn.one_hot(idx, E, dtype=jnp.float32) * gate[..., None]  # (G,S,k,E)
+    w = mask.sum(axis=2)                                          # (G,S,E)
+    return jnp.einsum("gsed,gse->gsd", ye.astype(jnp.float32),
+                      w).astype(x.dtype)

@@ -1,0 +1,261 @@
+"""Block assembly: (attn | mamba) mixer + (dense | MoE) FFN, scan over repeats.
+
+A model is ``pattern`` applied ``n_repeats`` times.  Parameters for pattern
+position p are stacked with a leading (R,) axis and consumed by lax.scan, so
+the HLO stays compact for 48-64 layer models.  Each layer is wrapped in
+jax.checkpoint (full remat) when cfg.remat.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..parallel.act import BATCH, TP, constrain
+from .attention import chunked_attention, decode_attention
+from .layers import apply_rope, gated_mlp, rms_norm
+from .mamba import (mamba_decode_step, mamba_forward, mamba_params_shapes,
+                    mamba_prefill)
+from .moe import moe_forward, moe_params_shapes
+
+__all__ = ["block_param_shapes", "blocks_forward", "blocks_decode",
+           "init_block_cache", "attn_cache_len"]
+
+
+# --------------------------------------------------------------------------
+# parameter shape declarations (one dict per pattern position; stacked by R)
+# --------------------------------------------------------------------------
+
+def _attn_shapes(cfg) -> Dict[str, tuple]:
+    D, H, Kv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    s = dict(wq=(D, H * hd), wk=(D, Kv * hd), wv=(D, Kv * hd), wo=(H * hd, D))
+    if cfg.qkv_bias:
+        s.update(bq=(H * hd,), bk=(Kv * hd,), bv=(Kv * hd,))
+    return s
+
+
+def block_param_shapes(cfg, spec) -> Dict[str, Any]:
+    """Shapes for one pattern position (without the leading repeat axis)."""
+    D = cfg.d_model
+    p: Dict[str, Any] = dict(norm1=(D,))
+    if spec.kind == "attn":
+        p["attn"] = _attn_shapes(cfg)
+    else:
+        p["mamba"] = mamba_params_shapes(cfg)
+    if spec.moe:
+        p["norm2"] = (D,)
+        p["moe"] = moe_params_shapes(cfg)
+        del p["moe"]["norm"]
+    elif cfg.d_ff:
+        p["norm2"] = (D,)
+        p["mlp"] = dict(wg=(D, cfg.d_ff), wu=(D, cfg.d_ff), wd=(cfg.d_ff, D))
+    if spec.kind == "mamba":
+        del p["mamba"]["norm"]
+    return p
+
+
+# --------------------------------------------------------------------------
+# forward (train / prefill)
+# --------------------------------------------------------------------------
+
+def _attn_sublayer(p, x, cfg, spec, rope, q_offset=0,
+                   return_kv: bool = False):
+    B, S, D = x.shape
+    H, Kv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = (x @ p["wq"] + (p["bq"] if cfg.qkv_bias else 0)).reshape(B, S, H, hd)
+    k = (x @ p["wk"] + (p["bk"] if cfg.qkv_bias else 0)).reshape(B, S, Kv, hd)
+    v = (x @ p["wv"] + (p["bv"] if cfg.qkv_bias else 0)).reshape(B, S, Kv, hd)
+    q = constrain(q, BATCH, None, TP, None)
+    if Kv == 1:   # MQA: the single kv head cannot carry TP — shard head_dim
+        k = constrain(k, BATCH, None, None, TP)
+        v = constrain(v, BATCH, None, None, TP)
+    else:
+        k = constrain(k, BATCH, None, TP, None)
+        v = constrain(v, BATCH, None, TP, None)
+    if rope is not None:
+        cos, sin = rope
+        q = apply_rope(q, cos, sin)
+        k = apply_rope(k, cos, sin)
+    o = chunked_attention(q, k, v, causal=cfg.causal, window=spec.window,
+                          q_chunk=cfg.attn_chunk, k_chunk=cfg.attn_chunk,
+                          q_offset=q_offset)
+    out = o.reshape(B, S, H * hd) @ p["wo"]
+    if return_kv:
+        return out, (k, v)
+    return out
+
+
+def _ffn_sublayer(p, x, cfg, spec) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    if spec.moe:
+        B, S, D = x.shape
+        y, aux = moe_forward(p["moe"], x.reshape(B, S, D), cfg)  # groups = batch
+        return y.reshape(B, S, D), aux
+    return gated_mlp(x, p["mlp"]["wg"], p["mlp"]["wu"], p["mlp"]["wd"],
+                     cfg.mlp_act), jnp.float32(0.0)
+
+
+def _one_block(spec, p, x, cfg, rope, cache_slice=None, cur_pos=None):
+    """Apply mixer + ffn.  If cache_slice is given we are decoding (S == 1)."""
+    aux = jnp.float32(0.0)
+    new_cache = None
+    h = rms_norm(x, p["norm1"], cfg.norm_eps)
+    if spec.kind == "attn":
+        if cache_slice is None:
+            h = _attn_sublayer(p["attn"], h, cfg, spec, rope)
+        else:
+            h, new_cache = _attn_decode(p["attn"], h, cfg, spec, rope,
+                                        cache_slice, cur_pos)
+    else:
+        if cache_slice is None:
+            h = mamba_forward(p["mamba"], h, cfg)
+        else:
+            h, new_cache = mamba_decode_step(p["mamba"], h, cache_slice, cfg)
+    x = x + h
+    if "norm2" in p:
+        h = rms_norm(x, p["norm2"], cfg.norm_eps)
+        h, aux = _ffn_sublayer(p, h, cfg, spec)
+        x = x + h
+    return x, aux, new_cache
+
+
+def blocks_forward(block_params: List[Dict], x: jnp.ndarray, cfg, rope
+                   ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Scan over repeats; returns (hidden, total_aux_loss)."""
+    pattern = cfg.pattern
+
+    def body(carry, stacked):
+        h, aux = carry
+        for spec, p in zip(pattern, stacked):
+            h = constrain(h, BATCH, None, None)
+            h, a, _ = _one_block(spec, p, h, cfg, rope)
+            aux = aux + a
+        h = constrain(h, BATCH, None, None)
+        return (h, aux), None
+
+    if cfg.remat:
+        body = jax.checkpoint(body)
+    (h, aux), _ = jax.lax.scan(body, (x, jnp.float32(0.0)), tuple(block_params))
+    return h, aux
+
+
+# --------------------------------------------------------------------------
+# decode (+ cache plumbing)
+# --------------------------------------------------------------------------
+
+def attn_cache_len(cfg, spec, max_len: int) -> int:
+    if spec.window is not None:
+        return min(spec.window, max_len)
+    return max_len
+
+
+def init_block_cache(cfg, spec, B: int, max_len: int, dtype) -> Optional[Dict]:
+    """Cache pytree for ONE pattern position (without the repeat axis)."""
+    if spec.kind == "attn":
+        L = attn_cache_len(cfg, spec, max_len)
+        Kv, hd = cfg.n_kv_heads, cfg.head_dim
+        return dict(k=jnp.zeros((B, L, Kv, hd), dtype),
+                    v=jnp.zeros((B, L, Kv, hd), dtype),
+                    pos=jnp.full((L,), -1, jnp.int32))
+    return dict(conv=jnp.zeros((B, cfg.ssm_conv - 1, cfg.d_inner), dtype),
+                ssm=jnp.zeros((B, cfg.d_inner, cfg.ssm_state), jnp.float32))
+
+
+def _attn_decode(p, x, cfg, spec, rope, cache, cur_pos):
+    B, S, D = x.shape            # S == 1
+    H, Kv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = (x @ p["wq"] + (p["bq"] if cfg.qkv_bias else 0)).reshape(B, 1, H, hd)
+    k = (x @ p["wk"] + (p["bk"] if cfg.qkv_bias else 0)).reshape(B, 1, Kv, hd)
+    v = (x @ p["wv"] + (p["bv"] if cfg.qkv_bias else 0)).reshape(B, 1, Kv, hd)
+    if rope is not None:
+        cos, sin = rope
+        q = apply_rope(q, cos, sin)
+        k = apply_rope(k, cos, sin)
+    L = cache["k"].shape[1]
+    slot = jnp.mod(cur_pos, L)
+    kc = jax.lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype),
+                                      (0, slot, 0, 0))
+    vc = jax.lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype),
+                                      (0, slot, 0, 0))
+    posc = cache["pos"].at[slot].set(cur_pos)
+    valid_window = spec.window if spec.window is not None else None
+    o = _decode_attn_with_slots(q, kc, vc, posc, cur_pos, valid_window)
+    out = o.reshape(B, 1, H * hd) @ p["wo"]
+    return out, dict(k=kc, v=vc, pos=posc)
+
+
+def _decode_attn_with_slots(q, k_cache, v_cache, slot_pos, cur_pos, window):
+    import math as _m
+    B, _, H, hd = q.shape
+    L, Kv = k_cache.shape[1], k_cache.shape[2]
+    G = H // Kv
+    qg = q.reshape(B, Kv, G, hd)
+    s = jnp.einsum("bkgd,bskd->bkgs", qg, k_cache,
+                   preferred_element_type=jnp.float32) / _m.sqrt(hd)
+    valid = (slot_pos >= 0) & (slot_pos <= cur_pos)
+    if window is not None:
+        valid &= slot_pos > cur_pos - window
+    s = jnp.where(valid[None, None, None, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgs,bskd->bkgd", p.astype(v_cache.dtype), v_cache,
+                   preferred_element_type=jnp.float32)
+    return o.reshape(B, 1, H, hd).astype(q.dtype)
+
+
+def blocks_prefill(block_params: List[Dict], x: jnp.ndarray, cfg, rope,
+                   max_len: int) -> Tuple[jnp.ndarray, List[Dict]]:
+    """Forward over the prompt AND build the decode caches (leading (R,) axis)."""
+    pattern = cfg.pattern
+    B, S, _ = x.shape
+
+    def body(h, params_r):
+        caches_r = []
+        for spec, p in zip(pattern, params_r):
+            h = constrain(h, BATCH, None, None)
+            hn = rms_norm(h, p["norm1"], cfg.norm_eps)
+            if spec.kind == "attn":
+                out, (k, v) = _attn_sublayer(p["attn"], hn, cfg, spec, rope,
+                                             return_kv=True)
+                L = attn_cache_len(cfg, spec, max_len)
+                kc = jnp.zeros((B, L, cfg.n_kv_heads, cfg.head_dim), k.dtype)
+                vc = jnp.zeros_like(kc)
+                keep = min(S, L)
+                # windowed layers keep the tail (window | S for our shapes)
+                kc = jax.lax.dynamic_update_slice(kc, k[:, S - keep:], (0, 0, 0, 0))
+                vc = jax.lax.dynamic_update_slice(vc, v[:, S - keep:], (0, 0, 0, 0))
+                pos = jnp.where(jnp.arange(L) < keep,
+                                jnp.arange(L) + (S - keep), -1)
+                cache = dict(k=kc, v=vc, pos=pos.astype(jnp.int32))
+            else:
+                out, cache = mamba_prefill(p["mamba"], hn, cfg)
+            h = h + out
+            if "norm2" in p:
+                hn = rms_norm(h, p["norm2"], cfg.norm_eps)
+                out, _ = _ffn_sublayer(p, hn, cfg, spec)
+                h = h + out
+            caches_r.append(cache)
+        return h, tuple(caches_r)
+
+    if cfg.remat:
+        body = jax.checkpoint(body)
+    h, caches = jax.lax.scan(body, x, tuple(block_params))
+    return h, list(caches)
+
+
+def blocks_decode(block_params: List[Dict], caches: List[Dict], x: jnp.ndarray,
+                  cfg, rope, cur_pos) -> Tuple[jnp.ndarray, List[Dict]]:
+    """One decode step through all layers.  caches[p] has leading (R,) axis."""
+    pattern = cfg.pattern
+
+    def body(h, stacked):
+        params_r, caches_r = stacked
+        new_caches_r = []
+        for spec, p, c in zip(pattern, params_r, caches_r):
+            h, _, nc = _one_block(spec, p, h, cfg, rope, cache_slice=c,
+                                  cur_pos=cur_pos)
+            new_caches_r.append(nc)
+        return h, tuple(new_caches_r)
+
+    h, new_caches = jax.lax.scan(body, x, (tuple(block_params), tuple(caches)))
+    return h, list(new_caches)

@@ -1,0 +1,58 @@
+"""int8 gradient compression with error feedback (distributed-optimization trick).
+
+Per-tensor-row scaling: g ≈ scale * int8.  The residual (g - dequant) is
+carried in an error buffer and added to the next step's gradient, so the
+compression bias vanishes over time (error-feedback SGD/Adam, 1-bit-Adam
+class).  In a multi-pod run this halves/quarters the DP all-reduce bytes —
+it is applied to the *data-parallel* gradient reduction only.
+
+compress -> (all-reduce int8 payload) -> decompress.  Under GSPMD the
+all-reduce is implicit; we expose the quantize/dequantize pair + the error
+state so train_step can wrap its gradients.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["compress", "decompress", "init_error_state", "apply_error_feedback"]
+
+
+def compress(g: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Row-wise symmetric int8 quantization. Returns (q, scale)."""
+    g32 = g.astype(jnp.float32)
+    flat = g32.reshape(g32.shape[0], -1) if g32.ndim > 1 else g32.reshape(1, -1)
+    scale = jnp.max(jnp.abs(flat), axis=-1, keepdims=True) / 127.0
+    scale = jnp.maximum(scale, 1e-12)
+    q = jnp.clip(jnp.round(flat / scale), -127, 127).astype(jnp.int8)
+    return q.reshape(g32.shape), scale.reshape(
+        (g32.shape[0],) + (1,) * (g32.ndim - 1) if g32.ndim > 1 else (1,))
+
+
+def decompress(q: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    return q.astype(jnp.float32) * scale
+
+
+def init_error_state(params) -> Any:
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def apply_error_feedback(grads, err_state):
+    """Returns (quantize-then-dequantize grads, new error state).
+
+    The returned grads are what every worker sees after the int8 all-reduce;
+    err accumulates the per-worker quantization residual.
+    """
+    def one(g, e):
+        g32 = g.astype(jnp.float32) + e
+        q, s = compress(g32)
+        deq = decompress(q, s)
+        return deq.astype(g.dtype), g32 - deq
+
+    flat_g, tdef = jax.tree.flatten(grads)
+    flat_e = jax.tree.leaves(err_state)
+    out = [one(g, e) for g, e in zip(flat_g, flat_e)]
+    return (jax.tree.unflatten(tdef, [o[0] for o in out]),
+            jax.tree.unflatten(tdef, [o[1] for o in out]))

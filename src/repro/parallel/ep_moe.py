@@ -1,0 +1,112 @@
+"""Explicit shard_map EP MoE — the fix for the kimi-k2 §Perf finding.
+
+GSPMD replicates gather/scatter token routing (measured 7.3 TB/step of
+collective traffic on kimi-k2 train_4k vs ~0.25 TB inherent).  This module
+routes explicitly: inside a shard_map over the ('data','model') mesh, each
+data shard sorts its own tokens, and the dispatch/return exchanges are
+explicit ``jax.lax.all_to_all`` on the model axis — the exact EP volume,
+nothing replicated.
+
+Layout (per (data d, model m) shard):
+  tokens   : local groups (G/d, S, D)
+  experts  : wg/wu/wd shards (E/m, D, F)
+  dispatch : (m, E/m, Cs, D) all_to_all on 'model' -> each model shard gets
+             the slots destined for ITS experts from every data shard.
+
+Forward-only building block (the full train-graph integration with custom
+VJP is the roadmap item; this validates the exchange pattern and its cost).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..models.moe import capacity
+
+__all__ = ["ep_moe_forward"]
+
+
+def _route_local(x, router_w, k: int, C: int, E: int):
+    """Route one shard's tokens (S, D) into (E, C) slots (local sort)."""
+    S = x.shape[0]
+    logits = x @ router_w.astype(x.dtype)
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    _, expert_idx = jax.lax.top_k(probs, k)
+    gate = jnp.take_along_axis(probs, expert_idx, axis=-1)
+    gate = gate / jnp.maximum(gate.sum(-1, keepdims=True), 1e-9)
+    flat = expert_idx.reshape(-1)
+    order = jnp.argsort(flat * (S * k) + jnp.arange(S * k))
+    sorted_e = flat[order]
+    counts = jnp.zeros(E, jnp.int32).at[flat].add(1)
+    starts = jnp.cumsum(counts) - counts
+    rank = jnp.arange(S * k) - starts[sorted_e]
+    ok = rank < C
+    slot = jnp.where(ok, sorted_e * C + rank, E * C)
+    dispatch = jnp.full(E * C + 1, S * k, jnp.int32).at[slot].set(order)[:E * C]
+    token_of = jnp.where(dispatch < S * k, dispatch // k, S)
+    xpad = jnp.concatenate([x, jnp.zeros((1, x.shape[1]), x.dtype)])
+    xe = xpad[token_of].reshape(E, C, x.shape[1])
+    return xe, dispatch.reshape(E, C), gate
+
+
+def ep_moe_forward(mesh: Mesh, params: Dict, x: jnp.ndarray, cfg
+                   ) -> jnp.ndarray:
+    """x: (G, S, D) sharded on 'data'; expert weights sharded on 'model'.
+
+    Returns y (G, S, D) sharded on 'data'.  All cross-device traffic is two
+    explicit all_to_all calls of exactly (E*C*D / model) payload per shard.
+    """
+    E, k, D = cfg.n_experts, cfg.experts_per_token, cfg.d_model
+    M = mesh.shape["model"]
+    assert E % M == 0, "experts must divide the model axis"
+
+    def local(x_l, router_w, wg_l, wu_l, wd_l):
+        # x_l: (G_l, S, D); w*_l: (E/M, D, F)
+        G_l, S, _ = x_l.shape
+        C = capacity(S, E, k, cfg.capacity_factor)
+        xe, dispatch, gate = jax.vmap(
+            lambda xs: _route_local(xs, router_w, k, C, E))(x_l)
+        # (G_l, E, C, D) -> regroup expert axis: (G_l, M, E/M, C, D)
+        xe = xe.reshape(G_l, M, E // M, C, D)
+        # dispatch exchange: split axis 1 across 'model', concat nothing —
+        # each model shard receives every data-shard-local group's slots for
+        # its experts: result (G_l * M?, ...) — all_to_all over model swaps
+        # the M axis for a new leading shard axis.
+        xe_r = jax.lax.all_to_all(xe, "model", split_axis=1, concat_axis=0,
+                                  tiled=True)
+        xe_r = xe_r.reshape(G_l * M, E // M, C, D)
+        act = jax.nn.silu if cfg.mlp_act == "silu" else (
+            lambda a: jax.nn.gelu(a, approximate=True))
+        g = jnp.einsum("gecd,edf->gecf", xe_r, wg_l.astype(xe_r.dtype))
+        u = jnp.einsum("gecd,edf->gecf", xe_r, wu_l.astype(xe_r.dtype))
+        ye = jnp.einsum("gecf,efd->gecd", act(g) * u, wd_l.astype(xe_r.dtype))
+        # return exchange: inverse all_to_all
+        # inverse exchange: (G_l*M, E/M, C, D) -a2a-> (G_l, E, C, D)
+        ye_b = jax.lax.all_to_all(ye, "model", split_axis=0, concat_axis=1,
+                                  tiled=True)
+        ye_b = ye_b.reshape(G_l, E, C, D)
+        # local combine (gather + weighted sum), per group
+        def combine(y_e, disp, xg, gates):
+            S_l = xg.shape[0]
+            flat_gate = jnp.concatenate(
+                [gates.reshape(-1), jnp.zeros((1,), gates.dtype)])
+            gsel = flat_gate[jnp.where(disp < S_l * k, disp, S_l * k)]
+            tok = jnp.where(disp < S_l * k, disp // k, S_l)
+            y = jnp.zeros((S_l + 1, D), y_e.dtype)
+            y = y.at[tok.reshape(-1)].add(
+                y_e.reshape(-1, D) * gsel.reshape(-1, 1).astype(y_e.dtype))
+            return y[:S_l]
+        return jax.vmap(combine)(ye_b, dispatch, x_l, gate)
+
+    fn = shard_map(
+        local, mesh=mesh,
+        in_specs=(P("data", None, None), P(), P("model", None, None),
+                  P("model", None, None), P("model", None, None)),
+        out_specs=P("data", None, None),
+        check_rep=False)
+    return fn(x, params["router"], params["wg"], params["wu"], params["wd"])

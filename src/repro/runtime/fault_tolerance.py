@@ -1,0 +1,96 @@
+"""Fault-tolerance primitives: straggler monitor, elastic re-mesh/reshard,
+and the discrepancy-based degraded-operation certificate (paper §3).
+
+Large-scale story (DESIGN.md §2): on a torus, losing nodes forces re-packing
+into a contiguous sub-torus; on a Ramanujan interconnect the discrepancy
+property certifies a bandwidth floor for *whatever* nodes survive, so the
+scheduler can keep the job running with only a re-shard.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+from typing import Any, Deque, Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+from ..core.placement import ramanujan_placement_guarantee
+
+__all__ = ["StragglerMonitor", "reshard", "degraded_operation_certificate",
+           "ElasticPlan"]
+
+
+# --------------------------------------------------------------------------
+# straggler mitigation
+# --------------------------------------------------------------------------
+
+class StragglerMonitor:
+    """Tracks per-step wall time; flags stragglers by robust z-score.
+
+    Policy hooks: ``on_straggler`` is called with (step, duration, median);
+    in a multi-host deployment this triggers (a) marking the slow host for
+    the next elastic re-mesh, or (b) skipping its gradient contribution for
+    the step (bounded staleness).  Here it records decisions for tests.
+    """
+
+    def __init__(self, window: int = 32, threshold: float = 3.0,
+                 min_samples: int = 8):
+        self.window: Deque[float] = deque(maxlen=window)
+        self.threshold = threshold
+        self.min_samples = min_samples
+        self.flagged: List[Tuple[int, float, float]] = []
+        self._t0: Optional[float] = None
+
+    def step_start(self):
+        self._t0 = time.monotonic()
+
+    def step_end(self, step: int, duration: Optional[float] = None) -> bool:
+        if duration is None:
+            duration = time.monotonic() - (self._t0 or time.monotonic())
+        is_straggler = False
+        if len(self.window) >= self.min_samples:
+            med = float(np.median(self.window))
+            mad = float(np.median(np.abs(np.asarray(self.window) - med))) + 1e-9
+            if duration > med + self.threshold * 1.4826 * mad and duration > 1.2 * med:
+                is_straggler = True
+                self.flagged.append((step, duration, med))
+        self.window.append(duration)
+        return is_straggler
+
+
+# --------------------------------------------------------------------------
+# elastic re-mesh
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ElasticPlan:
+    old_devices: int
+    new_devices: int
+    new_mesh_shape: Tuple[int, ...]
+    note: str
+
+
+def reshard(state: Any, new_shardings: Any) -> Any:
+    """Re-place a (host-materialized or differently-sharded) pytree under new
+    shardings — the restore path after an elastic re-mesh."""
+    return jax.tree.map(
+        lambda x, s: jax.device_put(np.asarray(x), s), state, new_shardings)
+
+
+def plan_elastic_remesh(n_devices: int, lost: int, model_axis: int
+                        ) -> ElasticPlan:
+    """Largest (data, model) mesh on surviving devices, preserving the model
+    axis (TP degree is a property of the compiled program; only DP shrinks)."""
+    survive = n_devices - lost
+    data = survive // model_axis
+    if data < 1:
+        raise ValueError("not enough devices to keep the model axis")
+    return ElasticPlan(n_devices, data * model_axis, (data, model_axis),
+                       note=f"dp {n_devices // model_axis}->{data}, tp kept")
+
+
+def degraded_operation_certificate(n: int, radix: int, alpha: float):
+    """The paper's §3 guarantee applied to the surviving alpha-fraction."""
+    return ramanujan_placement_guarantee(n, radix, alpha)

@@ -1,0 +1,60 @@
+"""Lowerable step functions: train_step / prefill_step / decode_step.
+
+These are the functions the multi-pod dry-run lowers and the trainers jit.
+All are pure: (params, opt_state, batch) -> (params, opt_state, metrics) etc.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from ..models import model as M
+from ..optim.adamw import AdamWConfig, adamw_init, adamw_update
+from ..optim.compression import apply_error_feedback
+
+__all__ = ["make_train_step", "make_prefill_step", "make_decode_step",
+           "init_train_state"]
+
+
+def init_train_state(cfg: ArchConfig, opt_cfg: AdamWConfig, key):
+    params = M.init_params(cfg, key)
+    opt_state = adamw_init(params, opt_cfg)
+    return params, opt_state
+
+
+def make_train_step(cfg: ArchConfig, opt_cfg: AdamWConfig,
+                    grad_compression: bool = False):
+    """Returns train_step(params, opt_state, batch[, err_state])."""
+
+    def train_step(params, opt_state, batch, err_state=None):
+        (loss, metrics), grads = jax.value_and_grad(
+            M.loss_fn, has_aux=True)(params, batch, cfg)
+        new_err = None
+        if grad_compression:
+            grads, new_err = apply_error_feedback(grads, err_state)
+        params, opt_state, opt_metrics = adamw_update(params, grads, opt_state,
+                                                      opt_cfg)
+        metrics = dict(metrics, total_loss=loss, **opt_metrics)
+        if grad_compression:
+            return params, opt_state, new_err, metrics
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def make_prefill_step(cfg: ArchConfig, max_len: Optional[int] = None):
+    def prefill_step(params, batch):
+        L = max_len if max_len is not None else (
+            batch["tokens"].shape[1] if "tokens" in batch else batch["embeds"].shape[1])
+        return M.prefill(params, batch, cfg, max_len=L)
+    return prefill_step
+
+
+def make_decode_step(cfg: ArchConfig):
+    def decode_step(params, token, caches, cur_pos):
+        return M.decode_step(params, token, caches, cur_pos, cfg)
+    return decode_step

@@ -1,0 +1,59 @@
+"""Topology-aware collective cost model + placement guarantees."""
+import numpy as np
+import pytest
+
+from repro.core import topologies as T
+from repro.core.collectives import NetworkModel, network_from_topology, tpu_v5e_ici
+from repro.core.placement import empirical_subset_bw, ramanujan_placement_guarantee
+from repro.core.ramanujan import lps
+
+
+def test_v5e_pod_model():
+    net = tpu_v5e_ici(16, 16)
+    assert net.n == 256 and net.radix == 4
+    assert net.bisection_links == 32
+    assert net.diameter == 16
+
+
+def test_allreduce_monotone_in_bytes():
+    net = tpu_v5e_ici()
+    assert net.all_reduce(1 << 30) > net.all_reduce(1 << 20) > 0
+
+
+def test_ramanujan_beats_torus_at_equal_radix_and_nodes():
+    """The paper's thesis, quantified for LM collectives: an LPS-like network
+    with the same number of nodes/links has a far larger certified bisection,
+    so bisection-limited collectives are predicted faster."""
+    torus = network_from_topology(T.torus(16, 2), vertex_transitive=True)
+    g = lps(13, 5)   # 2184 nodes, radix 6 — compare *per-node* figures instead
+    ram = network_from_topology(g, vertex_transitive=True)
+    # normalize: compare bisection links per node
+    assert ram.bisection_links / ram.n > 5 * torus.bisection_links / torus.n
+    # all-to-all (MoE dispatch) is bisection-limited: Ramanujan wins per node
+    b = 1 << 20
+    t_torus = torus.all_to_all(b) * torus.n
+    t_ram = ram.all_to_all(b) * ram.n
+    assert t_ram / ram.n < t_torus / torus.n
+
+
+def test_allreduce_injection_floor():
+    """With a huge bisection, time approaches the injection bound."""
+    net = NetworkModel("ideal", n=256, radix=4, bisection_links=1e9, diameter=1)
+    b = 1 << 30
+    expect = 2 * b * 255 / 256 / (4 * net.link_bw)
+    assert abs(net.all_reduce(b) - expect) / expect < 0.01
+
+
+def test_placement_guarantee_vs_torus_empirical():
+    """Discrepancy floor (Ramanujan) vs measured worst-case subset cut (torus)."""
+    g = lps(13, 17)              # n=1092, k=18
+    alpha = 0.9
+    guar = ramanujan_placement_guarantee(g.n, g.radix, alpha)
+    assert guar.guaranteed_bisection_edges > 0
+    emp = empirical_subset_bw(g, alpha, trials=8, seed=0)
+    assert emp >= guar.guaranteed_bisection_edges * 0.9  # floor holds empirically
+    # torus of comparable size has no useful floor at the same alpha: its
+    # empirical subset bandwidth per node is far lower
+    t = T.torus(33, 2)           # 1089 nodes
+    emp_t = empirical_subset_bw(t, alpha, trials=8, seed=0)
+    assert emp / g.n > 2 * emp_t / t.n

@@ -1,0 +1,60 @@
+"""Config registry: exact assigned specs + shape-skip rules."""
+import pytest
+
+from repro.configs import SHAPES, cells_for, get_config, list_configs
+
+
+def test_all_assigned_archs_registered():
+    expect = {"qwen2-vl-7b", "jamba-v0.1-52b", "falcon-mamba-7b", "grok-1-314b",
+              "kimi-k2-1t-a32b", "gemma3-12b", "h2o-danube-3-4b", "gemma-2b",
+              "qwen2-7b", "hubert-xlarge"}
+    assert expect <= set(list_configs())
+
+
+def test_exact_assigned_specs():
+    c = get_config("kimi-k2-1t-a32b")
+    assert (c.n_layers, c.d_model, c.n_heads, c.n_kv_heads, c.d_ff or c.moe_d_ff,
+            c.vocab_size, c.n_experts, c.experts_per_token) == \
+        (61, 7168, 64, 8, 2048, 163840, 384, 8)
+    c = get_config("grok-1-314b")
+    assert (c.n_layers, c.d_model, c.n_heads, c.n_kv_heads, c.moe_d_ff,
+            c.vocab_size, c.n_experts, c.experts_per_token) == \
+        (64, 6144, 48, 8, 32768, 131072, 8, 2)
+    c = get_config("falcon-mamba-7b")
+    assert (c.n_layers, c.d_model, c.d_ff, c.vocab_size, c.ssm_state) == \
+        (64, 4096, 0, 65024, 16)
+    c = get_config("gemma-2b")
+    assert (c.n_layers, c.d_model, c.n_heads, c.n_kv_heads, c.head_dim,
+            c.d_ff, c.vocab_size) == (18, 2048, 8, 1, 256, 16384, 256000)
+    c = get_config("hubert-xlarge")
+    assert (c.n_layers, c.d_model, c.n_heads, c.d_ff, c.vocab_size,
+            c.causal) == (48, 1280, 16, 5120, 504, False)
+
+
+def test_shape_cells_and_skips():
+    # pure full-attention archs skip long_500k
+    for a in ("qwen2-7b", "qwen2-vl-7b", "grok-1-314b", "kimi-k2-1t-a32b",
+              "gemma-2b"):
+        names = {s.name for s in cells_for(get_config(a))}
+        assert "long_500k" not in names and "train_4k" in names
+    # ssm/hybrid/swa run long_500k
+    for a in ("falcon-mamba-7b", "jamba-v0.1-52b", "h2o-danube-3-4b",
+              "gemma3-12b"):
+        assert "long_500k" in {s.name for s in cells_for(get_config(a))}
+    # encoder-only: no decode shapes
+    names = {s.name for s in cells_for(get_config("hubert-xlarge"))}
+    assert names == {"train_4k", "prefill_32k"}
+    # total cells = 33
+    total = sum(len(cells_for(get_config(a))) for a in
+                ["qwen2-vl-7b", "jamba-v0.1-52b", "falcon-mamba-7b",
+                 "grok-1-314b", "kimi-k2-1t-a32b", "gemma3-12b",
+                 "h2o-danube-3-4b", "gemma-2b", "qwen2-7b", "hubert-xlarge"])
+    assert total == 33
+
+
+def test_shapes_table():
+    assert SHAPES["train_4k"].seq_len == 4096
+    assert SHAPES["train_4k"].global_batch == 256
+    assert SHAPES["prefill_32k"].global_batch == 32
+    assert SHAPES["decode_32k"].global_batch == 128
+    assert SHAPES["long_500k"].seq_len == 524288

@@ -1,0 +1,162 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps in interpret mode."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.cayley_spmv.kernel import cayley_spmv
+from repro.kernels.cayley_spmv.ref import spmv_ref
+from repro.kernels.flash_attention.kernel import flash_attention
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.mamba_scan.kernel import mamba_scan
+from repro.kernels.mamba_scan.ref import mamba_scan_ref
+from repro.kernels.rmsnorm.kernel import rmsnorm
+from repro.kernels.rmsnorm.ref import rmsnorm_ref
+
+TOL = {jnp.float32: 2e-5, jnp.bfloat16: 2e-2}
+
+
+# --------------------------------------------------------------------------
+# flash attention
+# --------------------------------------------------------------------------
+
+FA_CASES = [
+    dict(B=2, H=2, S=256, D=64, causal=True, dtype=jnp.float32),
+    dict(B=1, H=4, S=128, D=128, causal=False, dtype=jnp.float32),
+    dict(B=2, H=1, S=200, D=64, causal=True, dtype=jnp.float32),   # ragged
+    dict(B=1, H=2, S=256, D=64, causal=True, dtype=jnp.bfloat16),
+    dict(B=1, H=1, S=384, D=256, causal=True, dtype=jnp.float32),  # big head
+]
+
+
+@pytest.mark.parametrize("c", FA_CASES, ids=[str(i) for i in range(len(FA_CASES))])
+def test_flash_attention_sweep(c):
+    key = jax.random.PRNGKey(0)
+    ks = jax.random.split(key, 3)
+    shape = (c["B"], c["H"], c["S"], c["D"])
+    q = jax.random.normal(ks[0], shape, c["dtype"])
+    k = jax.random.normal(ks[1], shape, c["dtype"])
+    v = jax.random.normal(ks[2], shape, c["dtype"])
+    out = flash_attention(q, k, v, causal=c["causal"], block_q=64, block_k=64,
+                          interpret=True)
+    ref = attention_ref(q, k, v, causal=c["causal"])
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32),
+                               atol=TOL[c["dtype"]], rtol=TOL[c["dtype"]])
+
+
+@settings(max_examples=8, deadline=None)
+@given(st.integers(65, 320), st.sampled_from([64, 128]), st.booleans())
+def test_flash_attention_property(S, D, causal):
+    key = jax.random.PRNGKey(S * 7 + D)
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (1, 2, S, D), jnp.float32)
+    k = jax.random.normal(ks[1], (1, 2, S, D), jnp.float32)
+    v = jax.random.normal(ks[2], (1, 2, S, D), jnp.float32)
+    out = flash_attention(q, k, v, causal=causal, block_q=64, block_k=64,
+                          interpret=True)
+    ref = attention_ref(q, k, v, causal=causal)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=3e-5,
+                               rtol=3e-5)
+
+
+# --------------------------------------------------------------------------
+# rmsnorm
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("shape", [(64, 256), (3, 17, 512), (1000, 128)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_rmsnorm_sweep(shape, dtype):
+    key = jax.random.PRNGKey(1)
+    x = jax.random.normal(key, shape, dtype)
+    w = jax.random.normal(jax.random.fold_in(key, 1), (shape[-1],), dtype) + 1.0
+    out = rmsnorm(x, w, interpret=True)
+    ref = rmsnorm_ref(x, w)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32),
+                               atol=TOL[dtype], rtol=TOL[dtype])
+
+
+# --------------------------------------------------------------------------
+# cayley spmv
+# --------------------------------------------------------------------------
+
+def test_cayley_spmv_on_lps():
+    from repro.core.ramanujan import lps
+    g = lps(13, 5)
+    tab = g.neighbor_table()
+    x = jax.random.normal(jax.random.PRNGKey(2), (g.n,), jnp.float32)
+    out = cayley_spmv(x, jnp.asarray(tab), block_rows=256, interpret=True)
+    ref = spmv_ref(x, jnp.asarray(tab))
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=1e-5)
+    # against the dense adjacency oracle too
+    dense = g.adjacency() @ np.asarray(x)
+    np.testing.assert_allclose(np.asarray(out), dense, atol=1e-3)
+
+
+@pytest.mark.parametrize("n,k,block", [(100, 3, 32), (513, 6, 128), (64, 4, 64)])
+def test_cayley_spmv_random_regular(n, k, block):
+    from repro.core.topologies import random_regular
+    g = random_regular(n if (n * k) % 2 == 0 else n + 1, k, seed=n)
+    tab = g.neighbor_table()
+    x = jax.random.normal(jax.random.PRNGKey(n), (g.n,), jnp.float32)
+    out = cayley_spmv(x, jnp.asarray(tab), block_rows=block, interpret=True)
+    np.testing.assert_allclose(np.asarray(out),
+                               np.asarray(spmv_ref(x, jnp.asarray(tab))),
+                               atol=1e-5)
+
+
+def test_cayley_spmv_with_loops():
+    """Loop-regularized, edge-irregular graph via padded gather operands."""
+    from repro.core.topologies import data_vortex
+    g = data_vortex(4, 3)
+    tab, w = g.gather_operands()
+    x = jax.random.normal(jax.random.PRNGKey(9), (g.n,), jnp.float32)
+    lw = jnp.asarray(w, jnp.float32)
+    out = cayley_spmv(x, jnp.asarray(tab), lw, block_rows=16, interpret=True)
+    ref = spmv_ref(x, jnp.asarray(tab), lw)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=1e-5)
+    dense = g.adjacency() @ np.asarray(x)
+    np.testing.assert_allclose(np.asarray(out), dense, atol=1e-3)
+
+
+def test_lanczos_with_kernel_matvec():
+    """End-to-end: Lanczos on the Pallas matvec reproduces rho2 of SlimFly."""
+    from repro.core import spectral as S
+    from repro.core.topologies import slimfly
+    from repro.kernels.cayley_spmv.ops import kernel_matvec
+    g = slimfly(5)
+    mv = kernel_matvec(g.neighbor_table())
+    lmax, _ = S.lanczos_extremes(mv, g.n, m=60,
+                                 deflate_vectors=[np.ones(g.n)])
+    rho2 = g.radix - lmax
+    assert abs(rho2 - 5.0) < 1e-3
+
+
+# --------------------------------------------------------------------------
+# mamba scan
+# --------------------------------------------------------------------------
+
+MS_CASES = [
+    dict(B=2, L=64, Di=32, N=8, chunk=16),
+    dict(B=1, L=100, Di=16, N=4, chunk=32),   # ragged L
+    dict(B=2, L=32, Di=64, N=16, chunk=32),
+]
+
+
+@pytest.mark.parametrize("c", MS_CASES, ids=[str(i) for i in range(len(MS_CASES))])
+def test_mamba_scan_sweep(c):
+    key = jax.random.PRNGKey(3)
+    ks = jax.random.split(key, 5)
+    x = jax.random.normal(ks[0], (c["B"], c["L"], c["Di"]), jnp.float32)
+    delta = jax.nn.softplus(jax.random.normal(ks[1], (c["B"], c["L"], c["Di"])) * 0.5)
+    A = -jnp.exp(jax.random.normal(ks[2], (c["Di"], c["N"])) * 0.3)
+    B_t = jax.random.normal(ks[3], (c["B"], c["L"], c["N"]), jnp.float32)
+    C_t = jax.random.normal(ks[4], (c["B"], c["L"], c["N"]), jnp.float32)
+    D = jnp.ones((c["Di"],), jnp.float32)
+    out = mamba_scan(x, delta, A, B_t, C_t, D, chunk=c["chunk"],
+                     block_d=16, interpret=True)
+    ref = mamba_scan_ref(x, delta, A, B_t, C_t, D)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-4,
+                               rtol=2e-4)

@@ -1,0 +1,109 @@
+"""Per-architecture smoke tests: REDUCED config of the same family, one
+forward/train step on CPU, asserting output shapes + no NaNs (deliverable f).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, list_configs
+from repro.configs.base import reduced
+from repro.models import model as M
+
+ARCHS = [a for a in list_configs() if a != "lm100m"]
+
+
+def _batch(cfg, key, B=2, S=32):
+    if cfg.frontend != "none":
+        return dict(embeds=jax.random.normal(key, (B, S, cfg.d_model), jnp.float32),
+                    labels=jax.random.randint(key, (B, S), 0, cfg.vocab_size))
+    return dict(tokens=jax.random.randint(key, (B, S), 0, cfg.vocab_size),
+                labels=jax.random.randint(key, (B, S), 0, cfg.vocab_size))
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_train_step(arch):
+    cfg = reduced(get_config(arch))
+    key = jax.random.PRNGKey(0)
+    params = M.init_params(cfg, key)
+    batch = _batch(cfg, key)
+
+    def loss(p):
+        return M.loss_fn(p, batch, cfg)[0]
+
+    val, grads = jax.jit(jax.value_and_grad(loss))(params)
+    assert np.isfinite(float(val)), f"{arch}: non-finite loss"
+    gleaves = jax.tree.leaves(grads)
+    assert all(np.all(np.isfinite(np.asarray(g, dtype=np.float32))) for g in gleaves), \
+        f"{arch}: non-finite grads"
+    # loss should be near ln(vocab) at init
+    assert abs(float(M.loss_fn(params, batch, cfg)[1]["loss"]) - np.log(cfg.vocab_size)) < 2.0
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_forward_shapes(arch):
+    cfg = reduced(get_config(arch))
+    key = jax.random.PRNGKey(1)
+    params = M.init_params(cfg, key)
+    B, S = 2, 32
+    batch = _batch(cfg, key, B, S)
+    h, aux = M.forward_hidden(params, batch, cfg)
+    assert h.shape == (B, S, cfg.d_model)
+    assert np.all(np.isfinite(np.asarray(h, dtype=np.float32)))
+
+
+@pytest.mark.parametrize("arch", [a for a in ARCHS
+                                  if get_config(a).causal])
+def test_smoke_decode_matches_forward(arch):
+    """Teacher-forced decode logits == full-forward logits (per position)."""
+    from repro.models.layers import rms_norm
+    cfg = reduced(get_config(arch))
+    key = jax.random.PRNGKey(2)
+    params = M.init_params(cfg, key)
+    B, S, EXTRA = 2, 16, 4
+    if cfg.frontend != "none":
+        embeds = jax.random.normal(key, (B, S + EXTRA, cfg.d_model), jnp.float32)
+        full_batch = dict(embeds=embeds)
+        prefill_batch = dict(embeds=embeds[:, :S])
+        def tok(i):
+            return embeds[:, S + i]
+    else:
+        toks = jax.random.randint(key, (B, S + EXTRA), 0, cfg.vocab_size)
+        full_batch = dict(tokens=toks)
+        prefill_batch = dict(tokens=toks[:, :S])
+        def tok(i):
+            return toks[:, S + i]
+    h, _ = M.forward_hidden(params, full_batch, cfg)
+    h = rms_norm(h, params["final_norm"], cfg.norm_eps)
+    full_logits = np.asarray((h @ M._head_weight(params, cfg)).astype(jnp.float32))
+    logits, caches = M.prefill(params, prefill_batch, cfg, max_len=S + EXTRA)
+    np.testing.assert_allclose(np.asarray(logits), full_logits[:, S - 1],
+                               atol=2e-4, rtol=2e-4)
+    for i in range(EXTRA):
+        logits, caches = M.decode_step(params, tok(i), caches,
+                                       jnp.int32(S + i), cfg)
+        np.testing.assert_allclose(np.asarray(logits), full_logits[:, S + i],
+                                   atol=2e-4, rtol=2e-4,
+                                   err_msg=f"{arch} decode step {i}")
+
+
+def test_encoder_only_prefill_logits():
+    cfg = reduced(get_config("hubert-xlarge"))
+    key = jax.random.PRNGKey(3)
+    params = M.init_params(cfg, key)
+    B, S = 2, 24
+    logits, cache = M.prefill(params, _batch(cfg, key, B, S), cfg, max_len=S)
+    assert cache is None
+    assert logits.shape == (B, S, cfg.vocab_size)
+
+
+def test_param_count_full_configs_match_published():
+    expect = {
+        "qwen2-7b": 7.6e9, "qwen2-vl-7b": 7.6e9, "falcon-mamba-7b": 7.3e9,
+        "gemma-2b": 2.5e9, "gemma3-12b": 11.8e9, "grok-1-314b": 316e9,
+        "kimi-k2-1t-a32b": 1.04e12, "jamba-v0.1-52b": 49.5e9,
+        "h2o-danube-3-4b": 4.0e9, "hubert-xlarge": 1.26e9,
+    }
+    for name, target in expect.items():
+        got = get_config(name).param_count()
+        assert abs(got - target) / target < 0.05, f"{name}: {got:.3e} vs {target:.3e}"

@@ -1,0 +1,94 @@
+"""LPS construction + Ramanujan certificates + expansion bounds (§2.1, §3)."""
+import math
+
+import numpy as np
+import pytest
+
+from repro.core import bounds as B
+from repro.core import spectral as S
+from repro.core import topologies as T
+from repro.core.properties import diameter
+from repro.core.ramanujan import (alon_boppana_lb, is_ramanujan, legendre, lps,
+                                  lps_size, ramanujan_bound)
+
+
+@pytest.mark.parametrize("p,q", [(13, 5), (13, 17), (17, 13)])
+def test_lps_is_ramanujan(p, q):
+    g = lps(p, q)
+    assert g.n == lps_size(p, q)
+    assert g.radix == q + 1
+    ok, lam = is_ramanujan(g)
+    assert ok, f"lambda={lam} > {ramanujan_bound(q + 1)}"
+
+
+def test_lps_bipartiteness_matches_legendre():
+    g1 = lps(13, 17)   # legendre(17,13)=legendre(4,13)=1 -> PSL, non-bipartite
+    assert legendre(17, 13) == 1 and not g1.meta["bipartite"]
+    g2 = lps(13, 5)    # legendre(5,13)=-1 -> PGL, bipartite
+    assert legendre(5, 13) == -1 and g2.meta["bipartite"]
+    import networkx as nx
+    assert nx.is_bipartite(g2.to_networkx())
+    assert not nx.is_bipartite(g1.to_networkx())
+
+
+def test_lps_connected():
+    import networkx as nx
+    assert nx.is_connected(lps(13, 5).to_networkx())
+
+
+def test_alon_boppana():
+    """lambda >= 2 sqrt(k-1)(1 - 2/D) - 2/D for any k-regular graph."""
+    for g in [T.torus(5, 2), T.hypercube(5), lps(13, 17)]:
+        k = g.radix
+        D = diameter(g, vertex_transitive=True)
+        lam = S.lambda_nontrivial(g)
+        assert lam >= alon_boppana_lb(k, D) - 1e-8
+
+
+def test_hypercube_not_ramanujan_for_large_d():
+    # Q_d has lambda = d - 2; Ramanujan needs d-2 <= 2 sqrt(d-1): fails for d >= 10
+    g = T.hypercube(10)
+    ok, lam = is_ramanujan(g)
+    assert not ok and abs(lam - 8) < 1e-8
+
+
+def test_torus_far_from_ramanujan():
+    """The paper's headline: deployed topologies are well-separated from optimal."""
+    g = T.torus(16, 2)  # v5e pod ICI
+    rho2 = S.algebraic_connectivity(g)
+    assert rho2 < 0.3 * B.ramanujan_rho2(g.radix)
+    # and the gap widens with scale (Theta(1/k^2) vs constant):
+    g3 = T.torus(16, 3)  # v5p-class 3D torus ICI, radix 6
+    assert S.algebraic_connectivity(g3) < 0.11 * B.ramanujan_rho2(g3.radix)
+
+
+def test_abelian_cayley_expansion_decay():
+    """Cioabă: fixed-radix abelian Cayley graphs cannot stay expanders."""
+    rho = [S.algebraic_connectivity(T.torus(k, 2)) for k in (4, 8, 16, 32)]
+    assert rho[0] > rho[1] > rho[2] > rho[3]
+    assert rho[3] < 0.05  # Theta(1/k^2) decay at fixed radix 4
+
+
+def test_discrepancy_property_on_lps():
+    """e(X,Y) concentration (§3) for random subsets of an LPS graph."""
+    g = lps(13, 17)
+    k, n = g.radix, g.n
+    rng = np.random.default_rng(0)
+    for _ in range(20):
+        sx, sy = rng.integers(10, n // 2, size=2)
+        X = rng.choice(n, size=sx, replace=False)
+        Y = rng.choice(n, size=sy, replace=False)
+        e = g.edge_count_between(X, Y)
+        bound = B.discrepancy_edge_bound(n, k, sx, sy)
+        assert abs(e - k * sx * sy / n) <= bound + 1e-6
+
+
+def test_active_subset_bandwidth_positive():
+    from repro.core.placement import (min_alpha_for_positive_guarantee,
+                                      ramanujan_placement_guarantee)
+    k = 18
+    a0 = min_alpha_for_positive_guarantee(k)
+    g = ramanujan_placement_guarantee(n=4896, k=k, alpha=min(1.0, a0 * 1.2))
+    assert g.guaranteed_bisection_edges > 0
+    g2 = ramanujan_placement_guarantee(n=4896, k=k, alpha=a0 * 0.5)
+    assert g2.guaranteed_bisection_edges == 0.0

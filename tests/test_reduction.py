@@ -1,0 +1,91 @@
+"""Reduction Lemma (Lemma 1) — exact replications of the paper's uses + property tests."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import reduction as red
+from repro.core import spectral as S
+from repro.core import topologies as T
+
+
+def test_butterfly_reduces_to_multiplicity_cycle():
+    """Prop 1's proof: layer orbits reduce Butterfly(k,s) to C_s with multiplicity k."""
+    k, s = 3, 4
+    b = T.butterfly(k, s)
+    orbits = np.arange(b.n) // (k ** s)
+    H = red.quotient(b, orbits)
+    C = T.cycle(s).adjacency() * k
+    np.testing.assert_allclose(H, C)
+    # hence rho2 <= 2k - 2k cos(2 pi / s)
+    rho2 = S.algebraic_connectivity(b)
+    assert rho2 <= 2 * k - 2 * k * np.cos(2 * np.pi / s) + 1e-8
+
+
+def test_data_vortex_reduces_to_cycle_box_looped_path():
+    """Prop 2's proof: height-bit-flip orbits reduce DV(A,C) to C_A box P'_C."""
+    A, C = 5, 4
+    dv = T.data_vortex(A, C)
+    orbits = np.arange(dv.n) // (2 ** (C - 1))
+    H = red.quotient(dv, orbits)
+    ref = T._cartesian_product(T.cycle(A), T.path_looped(C), "ref").adjacency()
+    np.testing.assert_allclose(np.sort(np.linalg.eigvals(H).real),
+                               np.sort(np.linalg.eigvalsh(ref)), atol=1e-8)
+
+
+def test_slimfly_reduces_to_kqq_with_loops():
+    """Prop 9's proof: +zeta-shift orbits reduce SlimFly(q) to K_{q,q} + (q-1)/2 loops."""
+    q = 5
+    sf = T.slimfly(q)
+    orbits = np.arange(sf.n) // q   # orbit = (block, x): {s} x {x} x F_q
+    H = red.quotient(sf, orbits)
+    # expected: bipartite complete between the two blocks + (q-1)/2 loop weight
+    expect = np.full((2 * q, 2 * q), 0.0)
+    expect[:q, q:] = 1.0
+    expect[q:, :q] = 1.0
+    np.fill_diagonal(expect, (q - 1) / 2.0)
+    np.testing.assert_allclose(H, expect)
+
+
+def test_fat_tree_reduction():
+    """Fig 3: level orbits of the fat tree give a weighted path quotient."""
+    ft = T.fat_tree(3)
+    levels = np.floor(np.log2(np.arange(ft.n) + 1)).astype(int)
+    H = red.quotient(ft, levels)
+    spec_h = np.linalg.eigvals(H)
+    assert red.spectrum_subset(spec_h, S.adjacency_spectrum(ft))
+
+
+def test_quotient_rejects_non_orbit_partition():
+    g = T.path(5)  # ends and middle are NOT exchangeable under one partition
+    bad = np.array([0, 1, 0, 1, 1])
+    with pytest.raises(ValueError):
+        red.quotient(g, bad)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(min_value=2, max_value=6), st.integers(min_value=2, max_value=5))
+def test_reduction_lemma_property_circulant_blowup(r, b):
+    """Property: blow each vertex of a circulant into b twins; twin-orbits are
+    automorphism orbits, and spec(quotient) ⊆ spec(G)."""
+    n = 2 * r + 1
+    base = T.cycle(n)
+    # blow up: replace vertex v by b copies; edges become complete bipartite
+    edges = []
+    for (u, v) in base.edges:
+        for i in range(b):
+            for j in range(b):
+                edges.append((u * b + i, v * b + j))
+    g = T.Topology("blowup", n * b, np.array(edges))
+    orbits = np.arange(n * b) // b
+    H = red.quotient(g, orbits)
+    assert red.spectrum_subset(np.linalg.eigvals(H), S.adjacency_spectrum(g))
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(min_value=3, max_value=8), st.integers(min_value=1, max_value=3))
+def test_reduction_lemma_property_torus_rings(k, d_sel):
+    """Orbits = rings of a 2-torus under rotation in one axis."""
+    t = T.torus(k, 2)
+    orbits = np.arange(t.n) // k
+    H = red.quotient(t, orbits)
+    assert red.spectrum_subset(np.linalg.eigvals(H), S.adjacency_spectrum(t))

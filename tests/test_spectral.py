@@ -1,0 +1,85 @@
+"""Spectral solver correctness: dense relations + JAX Lanczos vs dense oracle."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import spectral as S
+from repro.core import topologies as T
+from repro.core.ramanujan import lps
+
+
+def test_regular_spectral_relations():
+    """For k-regular G: rho2 = k*mu2 = k - lambda2 (paper §2)."""
+    g = T.torus(5, 2)
+    k = g.radix
+    lam = np.sort(S.adjacency_spectrum(g))
+    rho = np.sort(S.laplacian_spectrum(g))
+    mu = np.sort(S.normalized_laplacian_spectrum(g))
+    assert abs(rho[1] - (k - lam[-2])) < 1e-8
+    assert abs(rho[1] - k * mu[1]) < 1e-8
+
+
+def test_spectral_gap_positive_connected():
+    g = T.hypercube(4)
+    assert S.spectral_gap(g) > 0
+
+
+@pytest.mark.parametrize("topo_fn", [
+    lambda: T.hypercube(6),
+    lambda: T.torus(6, 2),
+    lambda: T.slimfly(5),
+    lambda: T.random_regular(128, 6, seed=3),
+])
+def test_lanczos_matches_dense(topo_fn):
+    g = topo_fn()
+    dense = float(S.laplacian_spectrum(g)[1])
+    lz = S.rho2_lanczos(g, iters=100)
+    assert abs(dense - lz) < 1e-3 * max(1.0, dense)
+
+
+def test_lanczos_extremes_on_known_operator():
+    """Deflated Lanczos on the cycle: lambda2 = 2cos(2pi/n), lambda_min = -2 (n even)."""
+    n = 64
+    g = T.cycle(n)
+    mv = S.table_matvec(g.neighbor_table())
+    lmax, lmin = S.lanczos_extremes(mv, n, m=n, deflate_vectors=[np.ones(n)])
+    assert abs(lmax - 2 * np.cos(2 * np.pi / n)) < 1e-4
+    assert abs(lmin - (-2.0)) < 1e-4
+
+
+def test_lanczos_bipartite_deflation():
+    g = lps(13, 5)  # bipartite PGL case
+    assert g.meta["bipartite"]
+    rho2_dense = float(S.laplacian_spectrum(g)[1])
+    rho2_lz = S.rho2_lanczos(g, iters=120)
+    assert abs(rho2_dense - rho2_lz) < 1e-3
+
+
+def test_fiedler_vector_orthogonal_to_ones():
+    g = T.torus(4, 2)
+    f = S.fiedler_vector(g)
+    assert abs(f.sum()) < 1e-8
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(min_value=3, max_value=10))
+def test_cycle_spectrum_property(n):
+    s = np.sort(S.adjacency_spectrum(T.cycle(n)))
+    expect = np.sort([2 * np.cos(2 * np.pi * j / n) for j in range(n)])
+    np.testing.assert_allclose(s, expect, atol=1e-8)
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(min_value=8, max_value=64).filter(lambda n: n % 2 == 0),
+       st.integers(min_value=3, max_value=5))
+def test_lanczos_random_regular_property(n, k):
+    """Lanczos rho2 agrees with dense on random regular graphs."""
+    if k >= n:
+        return
+    g = T.random_regular(n, k, seed=n * 7 + k)
+    import networkx as nx
+    if not nx.is_connected(g.to_networkx()):
+        return
+    dense = float(S.laplacian_spectrum(g)[1])
+    lz = S.rho2_lanczos(g, iters=min(n, 80))
+    assert abs(dense - lz) < 5e-3 * max(1.0, dense)

@@ -1,0 +1,213 @@
+"""Construction invariants for every topology of paper §4."""
+import numpy as np
+import pytest
+
+from repro.core import topologies as T
+from repro.core import spectral as S
+
+
+def test_path_spectrum():
+    n = 7
+    s = S.adjacency_spectrum(T.path(n))
+    expect = np.sort([2 * np.cos(np.pi * j / (n + 1)) for j in range(1, n + 1)])
+    np.testing.assert_allclose(np.sort(s), expect, atol=1e-9)
+
+
+def test_path_looped_spectrum():
+    n = 6
+    s = S.adjacency_spectrum(T.path_looped(n))
+    expect = np.sort([2 * np.cos(np.pi * j / n) for j in range(n)])
+    np.testing.assert_allclose(np.sort(s), expect, atol=1e-9)
+
+
+def test_cycle_spectrum():
+    n = 8
+    s = S.adjacency_spectrum(T.cycle(n))
+    expect = np.sort([2 * np.cos(2 * np.pi * j / n) for j in range(n)])
+    np.testing.assert_allclose(np.sort(s), expect, atol=1e-9)
+
+
+def test_hypercube():
+    q = T.hypercube(5)
+    assert q.n == 32 and q.radix == 5
+    # rho2 = 2 (well-known)
+    assert abs(S.algebraic_connectivity(q) - 2.0) < 1e-8
+    # adjacency spectrum: d - 2j with multiplicity C(d, j)
+    s = np.sort(S.adjacency_spectrum(q))
+    from math import comb
+    expect = np.sort(sum([[5 - 2 * j] * comb(5, j) for j in range(6)], []))
+    np.testing.assert_allclose(s, expect, atol=1e-8)
+
+
+@pytest.mark.parametrize("k,d", [(3, 2), (4, 2), (5, 3)])
+def test_torus(k, d):
+    t = T.torus(k, d)
+    assert t.n == k ** d and t.radix == 2 * d
+    rho2 = S.algebraic_connectivity(t)
+    assert abs(rho2 - 2 * (1 - np.cos(2 * np.pi / k))) < 1e-8
+
+
+def test_generalized_grid():
+    g = T.generalized_grid([3, 4, 2])
+    assert g.n == 24
+    rho2 = S.algebraic_connectivity(g)
+    assert abs(rho2 - (2 - 2 * np.cos(np.pi / 4))) < 1e-8  # max k = 4
+
+
+@pytest.mark.parametrize("k,s", [(2, 3), (3, 3), (3, 4), (4, 3)])
+def test_butterfly(k, s):
+    b = T.butterfly(k, s)
+    assert b.n == s * k ** s
+    assert b.radix == 2 * k
+    # diameter s for the cyclic arrangement (paper: "diameter of s")
+    from repro.core.properties import diameter
+    assert diameter(b, vertex_transitive=False) <= 2 * s  # sanity envelope
+
+
+@pytest.mark.parametrize("A,C", [(3, 3), (4, 3), (5, 4)])
+def test_data_vortex(A, C):
+    dv = T.data_vortex(A, C)
+    assert dv.n == A * C * 2 ** (C - 1)
+    assert dv.radix == 4  # after self-loop regularization
+    # loop count: inner+outer rings = 2 * A * 2^(C-1)
+    assert dv.loops.sum() == 2 * A * 2 ** (C - 1)
+
+
+@pytest.mark.parametrize("d", [3, 4, 5])
+def test_ccc(d):
+    c = T.cube_connected_cycles(d)
+    assert c.n == d * 2 ** d and c.radix == 3
+
+
+def test_ccc_lemma2_exact():
+    """Lemma 2: lambda_2(CC(G,d)) equals lambda_1 of G[s*] with exactly one -1
+    loop.  Validated EXACTLY (the paper's Prop 3 closed form is only an order
+    bound; see bounds._ccc)."""
+    import itertools
+    for d in (3, 4, 5):
+        C = T.cycle(d).adjacency()
+        ccc = T.cube_connected_cycles(d)
+        lam2 = np.sort(S.adjacency_spectrum(ccc))[-2]
+        s_star = np.ones(d)
+        s_star[0] = -1.0
+        lam1_sstar = np.linalg.eigvalsh(C + np.diag(s_star))[-1]
+        assert abs(lam2 - lam1_sstar) < 1e-9
+
+
+def test_ccc_theorem4():
+    """Riess-Strehl-Wanka: chi(CC(G,d)) = prod_s chi(G[s])."""
+    import itertools
+    d = 4
+    ccc = T.cube_connected_cycles(d)
+    spec = np.sort(S.adjacency_spectrum(ccc))
+    C = T.cycle(d).adjacency()
+    ref = []
+    for sv in itertools.product([-1, 1], repeat=d):
+        ref.extend(np.linalg.eigvalsh(C + np.diag(sv)))
+    np.testing.assert_allclose(spec, np.sort(ref), atol=1e-8)
+
+
+@pytest.mark.parametrize("k,ell", [(3, 2), (3, 3), (4, 2), (5, 2)])
+def test_clex_lemma3(k, ell):
+    """CLEX adjacency == Lemma 3's Kronecker expression; degree = 2lk-k-1."""
+    cl = T.clex(k, ell)
+    assert cl.n == k ** ell
+    assert cl.radix == 2 * ell * k - k - 1
+    A = cl.adjacency()
+    K = T.complete(k).adjacency()
+    M = np.zeros((k * k, k * k))
+    for i in range(k):
+        for j in range(k):
+            for a in range(k):
+                for b in range(k):
+                    M[i * k + j, a * k + b] = (i == b) + (j == a)
+    ref = np.kron(K, np.eye(k ** (ell - 1)))
+    for jj in range(ell - 1):
+        ref += np.kron(np.kron(np.eye(k ** jj), M), np.eye(k ** (ell - 2 - jj)))
+    np.testing.assert_allclose(A, ref, atol=1e-12)
+
+
+def test_clex_lemma4_spectrum_of_M():
+    k = 4
+    M = np.zeros((k * k, k * k))
+    for i in range(k):
+        for j in range(k):
+            for a in range(k):
+                for b in range(k):
+                    M[i * k + j, a * k + b] = (i == b) + (j == a)
+    s = np.sort(np.linalg.eigvalsh(M))
+    expect = np.sort([2 * k] + [k] * (k - 1) + [-k] * (k - 1) + [0] * ((k - 1) ** 2))
+    np.testing.assert_allclose(s, expect, atol=1e-9)
+
+
+@pytest.mark.parametrize("q", [5, 13])
+def test_slimfly(q):
+    sf = T.slimfly(q)
+    assert sf.n == 2 * q * q
+    assert sf.radix == (3 * q - 1) // 2
+    # Proposition 9: rho2 EXACTLY q
+    assert abs(S.algebraic_connectivity(sf) - q) < 1e-6
+    # MMS graphs have diameter 2
+    from repro.core.properties import diameter
+    assert diameter(sf, vertex_transitive=False) == 2
+
+
+@pytest.mark.parametrize("a,b", [(3, 3), (4, 3), (5, 2)])
+def test_peterson_torus(a, b):
+    pt = T.peterson_torus(a, b)
+    assert pt.n == 10 * a * b and pt.radix == 4
+
+
+def test_dragonfly():
+    H = T.complete(6)
+    df = T.dragonfly(H)
+    assert df.n == 6 * 7
+    assert df.radix == 6  # r + 1 = (|H|-1) + 1
+    # one global link between every pair of groups
+    groups = np.arange(df.n) // 6
+    u, v = df.edges[:, 0], df.edges[:, 1]
+    cross = groups[u] != groups[v]
+    assert cross.sum() == 7 * 6 // 2
+
+
+def test_g_connected_h_edge_condition():
+    """Definition 10: e({v} x V_H, {v'} x V_H) = kt iff {v,v'} in E_G."""
+    G = T.cycle(5)            # 2-regular
+    H = T.cycle(6)            # 6 = t*d with t=3, d=2
+    for k in (1, 2):
+        g = T.g_connected_h(G, H, k=k)
+        t = 3
+        groups = np.arange(g.n) // H.n
+        u, v = g.edges[:, 0], g.edges[:, 1]
+        for (a, b) in G.edges:
+            cnt = np.sum((groups[u] == a) & (groups[v] == b)) + \
+                  np.sum((groups[u] == b) & (groups[v] == a))
+            assert cnt == k * t
+        # matching edges form a k-regular graph
+        match = g.edges[groups[u] != groups[v]]
+        deg = np.bincount(match.reshape(-1), minlength=g.n)
+        assert np.all(deg == k)
+
+
+def test_fat_tree_reduction_friendly():
+    ft = T.fat_tree(3)
+    assert ft.n == 15
+    # leaves have degree base*2^0... root has 2 children with mult 4
+    deg = ft.degrees()
+    assert deg[0] == 8  # root: two child edges x mult 4
+
+
+def test_random_regular():
+    g = T.random_regular(64, 4, seed=1)
+    assert g.radix == 4 and g.n == 64
+
+
+def test_neighbor_table_matches_adjacency():
+    for g in [T.hypercube(4), T.torus(4, 2), T.slimfly(5), T.butterfly(2, 3)]:
+        tab = g.neighbor_table()
+        A = g.adjacency()
+        x = np.random.default_rng(0).normal(size=g.n)
+        y_tab = x[tab].sum(axis=1)
+        if g.loops is not None:
+            y_tab = y_tab + g.loops * x
+        np.testing.assert_allclose(y_tab, A @ x, atol=1e-9)
