@@ -3,14 +3,36 @@
 Curves per topology family under the paper's §5 assumptions (radix regimes
 <=64 current / <=128 next-gen; butterfly s>=3, CLEX ell>=2 & k>=3, DV C>=3,
 torus k>=3) + the Ramanujan Fiedler floor (k - 2 sqrt(k-1)) n/4 / (kn/2).
+
+All analytic Table-1 records come from the topology registry
+(``repro.api.closed_forms``) — the same expressions the survey engine checks
+against measurements — instead of a hand-maintained parallel dict.
 """
 from __future__ import annotations
 
-import math
 import pathlib
 from typing import List
 
+from repro.api import closed_forms
 from repro.core import bounds as B
+
+#: (family, parameter sweep, node cap or None).  prop_bw is scale-free, so
+#: families plotted to arbitrary size (butterfly/ccc/hypercube/slimfly) carry
+#: no cap; the capped ones match the paper's plotted domain.
+SWEEPS = [
+    ("butterfly", [dict(k=k, s=s) for k in (2, 3, 4, 8, 16, 32)
+                   for s in range(3, 12)], None),
+    ("ccc", [dict(d=d) for d in range(3, 22)], None),
+    ("clex", [dict(k=k, ell=ell) for k in range(3, 20) for ell in range(2, 8)],
+     3e6),
+    ("data_vortex", [dict(A=A, C=C) for A in (4, 8, 16, 32, 64)
+                     for C in range(3, 12)], 3e6),
+    ("hypercube", [dict(d=d) for d in range(3, 22)], None),
+    ("slimfly", [dict(q=q) for q in (5, 13, 17, 29, 37, 41, 53, 61, 73, 89, 97)],
+     None),
+    ("torus", [dict(k=k, d=d) for d in (2, 3, 4, 5)
+               for k in (3, 4, 8, 16, 32, 64)], 3e6),
+]
 
 
 def _ram_floor(k: float) -> float:
@@ -20,62 +42,14 @@ def _ram_floor(k: float) -> float:
 
 def curves(radix_cap: int = 64) -> List[dict]:
     rows = []
-    # Butterfly(k, s): radix 2k, n = s k^s, BW_ub = (k+1)k^s/2, 2m = 2k n
-    for k in (2, 3, 4, 8, 16, 32):
-        if 2 * k > radix_cap:
-            continue
-        for s in range(3, 12):
-            e = B.TABLE1["butterfly"](k, s)
-            rows.append(dict(topology="butterfly", nodes=e["nodes"],
-                             prop_bw=e["bw_ub"] / (e["radix"] * e["nodes"]),
-                             radix=e["radix"]))
-    # CCC(d): radix 3
-    for d in range(3, 22):
-        e = B.TABLE1["ccc"](d)
-        rows.append(dict(topology="ccc", nodes=e["nodes"],
-                         prop_bw=e["bw_ub"] / (e["radix"] * e["nodes"]),
-                         radix=3))
-    # CLEX(k, ell)
-    for k in range(3, 20):
-        for ell in range(2, 8):
-            e = B.TABLE1["clex"](k, ell)
-            if e["radix"] > radix_cap or e["nodes"] > 3e6:
+    for family, sweep, node_cap in SWEEPS:
+        for params in sweep:
+            e = closed_forms(family, **params)
+            if e["radix"] > radix_cap or "bw_ub" not in e:
                 continue
-            rows.append(dict(topology="clex", nodes=e["nodes"],
-                             prop_bw=e["bw_ub"] / (e["radix"] * e["nodes"]),
-                             radix=e["radix"]))
-    # DataVortex(A, C): radix 4
-    for A in (4, 8, 16, 32, 64):
-        for C in range(3, 12):
-            e = B.TABLE1["data_vortex"](A, C)
-            if e["nodes"] > 3e6:
+            if node_cap is not None and e["nodes"] > node_cap:
                 continue
-            rows.append(dict(topology="data_vortex", nodes=e["nodes"],
-                             prop_bw=e["bw_ub"] / (e["radix"] * e["nodes"]),
-                             radix=4))
-    # Hypercube
-    for d in range(3, 22):
-        if d > radix_cap:
-            continue
-        e = B.TABLE1["hypercube"](d)
-        rows.append(dict(topology="hypercube", nodes=e["nodes"],
-                         prop_bw=e["bw_ub"] / (e["radix"] * e["nodes"]),
-                         radix=d))
-    # SlimFly(q): prime q = 1 mod 4
-    for q in (5, 13, 17, 29, 37, 41, 53, 61, 73, 89, 97):
-        e = B.TABLE1["slimfly"](q)
-        if e["radix"] > radix_cap:
-            continue
-        rows.append(dict(topology="slimfly", nodes=e["nodes"],
-                         prop_bw=e["bw_ub"] / (e["radix"] * e["nodes"]),
-                         radix=e["radix"]))
-    # Torus(k, d)
-    for d in (2, 3, 4, 5):
-        for k in (3, 4, 8, 16, 32, 64):
-            e = B.TABLE1["torus"](k, d)
-            if e["nodes"] > 3e6 or e["radix"] > radix_cap:
-                continue
-            rows.append(dict(topology="torus", nodes=e["nodes"],
+            rows.append(dict(topology=family, nodes=e["nodes"],
                              prop_bw=e["bw_ub"] / (e["radix"] * e["nodes"]),
                              radix=e["radix"]))
     # Ramanujan floor at matched radixes

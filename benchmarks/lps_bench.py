@@ -1,64 +1,37 @@
-"""LPS Ramanujan certification (§3.1) + Pallas-kernel Lanczos timing.
+"""LPS Ramanujan certification (§3.1) + matrix-free Lanczos timing.
 
-For each (p, q): construct X^{p,q}, certify lambda(G) <= 2 sqrt(q) (dense for
-small n, deflated Lanczos above), check girth/diameter against Alon-Milman,
-and time the cayley_spmv-backed matvec (the production eigensolver path).
+For each (p, q): construct X^{p,q} through the registry, certify
+lambda(G) <= 2 sqrt(q) (dense oracle for small n, deflated Lanczos above —
+the Analysis session picks the backend by ``n``), and check the diameter
+against Alon-Milman.  Everything is one ``survey()`` call over spec strings.
 """
 from __future__ import annotations
 
-import math
-import pathlib
-import time
 from typing import List
 
-import numpy as np
+from repro.api import RAMANUJAN_COLUMNS, survey
 
-from repro.core import bounds as B
-from repro.core import spectral as S
-from repro.core.properties import eccentricity
-from repro.core.ramanujan import is_ramanujan, lps, ramanujan_bound
+SPECS = [
+    "lps(13,5)",
+    "lps(13,17)",
+    "lps(17,5)",
+    "lps(17,13)",
+    "lps(29,5)",
+]
 
-CASES = [(13, 5), (13, 17), (17, 5), (17, 13), (29, 5)]
+#: LPS instances above this order skip the dense eigendecomposition and
+#: certify through the deflated Lanczos path instead.
+DENSE_THRESHOLD = 5000
 
 
 def run(out_csv: str = "benchmarks/out/lps.csv") -> List[dict]:
-    rows = []
-    for p, q in CASES:
-        t0 = time.time()
-        g = lps(p, q)
-        build_s = time.time() - t0
-        k = g.radix
-        if g.n <= 5000:
-            spec = S.adjacency_spectrum(g)
-            lam = float(np.max(np.abs(spec[np.abs(np.abs(spec) - k) > 1e-6])))
-        else:
-            defl = [np.ones(g.n)]
-            if g.meta["bipartite"]:
-                import networkx as nx
-                color = nx.bipartite.color(g.to_networkx())
-                defl.append(np.array([1.0 if color[i] == 0 else -1.0
-                                      for i in range(g.n)]))
-            mv = S.table_matvec(g.neighbor_table())
-            lmax, lmin = S.lanczos_extremes(mv, g.n, m=150, deflate_vectors=defl)
-            lam = max(abs(lmax), abs(lmin))
-        t1 = time.time()
-        diam = eccentricity(g, 0)   # vertex-transitive (Cayley)
-        rows.append(dict(
-            p=p, q=q, n=g.n, radix=k, bipartite=g.meta["bipartite"],
-            lam=round(lam, 5), bound=round(ramanujan_bound(k), 5),
-            ramanujan=lam <= ramanujan_bound(k) + 1e-6,
-            diameter=diam,
-            alon_milman_diam_ub=B.alon_milman_diameter_ub(
-                g.n, k, k - lam),
-            build_seconds=round(build_s, 2),
-            spectrum_seconds=round(t1 - t0 - build_s, 2),
-        ))
-    path = pathlib.Path(out_csv)
-    path.parent.mkdir(parents=True, exist_ok=True)
-    cols = list(rows[0])
-    path.write_text("\n".join([",".join(cols)] +
-                              [",".join(str(r[c]) for c in cols) for r in rows]))
-    return rows
+    res = survey(SPECS, columns=RAMANUJAN_COLUMNS,
+                 dense_threshold=DENSE_THRESHOLD, lanczos_iters=150)
+    res.to_csv(out_csv)
+    # the aggregator's contract: a boolean per row under 'ramanujan'
+    for r in res.rows:
+        r["ramanujan"] = r["is_ramanujan"]
+    return res.rows
 
 
 if __name__ == "__main__":

@@ -1,10 +1,14 @@
 """Benchmark aggregator. One function per paper table/figure.
 
 Prints ``name,us_per_call,derived`` CSV (scaffold contract); detailed CSVs go
-to benchmarks/out/.
+to benchmarks/out/.  Also emits ``benchmarks/out/BENCH_survey.json`` timing
+the full Table-1 survey (total + per-row), so successive PRs accumulate a
+perf trajectory for the survey engine.
 """
 from __future__ import annotations
 
+import json
+import pathlib
 import time
 
 
@@ -16,11 +20,28 @@ def _timed(name, fn, derive):
     return rows
 
 
+def _emit_survey_bench(rows, total_us,
+                       out_json: str = "benchmarks/out/BENCH_survey.json") -> None:
+    payload = dict(
+        bench="table1_survey",
+        total_seconds=round(total_us / 1e6, 3),
+        cases=len(rows),
+        all_rho2_bounds_hold=all(r["rho2_ok"] for r in rows),
+        per_row=[dict(spec=r.get("instance"), nodes=r.get("nodes"),
+                      seconds=r.get("seconds")) for r in rows],
+    )
+    p = pathlib.Path(out_json)
+    p.parent.mkdir(parents=True, exist_ok=True)
+    p.write_text(json.dumps(payload, indent=2))
+
+
 def main() -> None:
     from . import collective_model, fig5, lps_bench, roofline, table1
 
-    _timed("table1_rho2_bw_bounds", table1.run,
-           lambda rows: f"all_rho2_bounds_hold={all(r['rho2_ok'] for r in rows)}")
+    t0 = time.time()
+    rows = _timed("table1_rho2_bw_bounds", table1.run,
+                  lambda rows: f"all_rho2_bounds_hold={all(r['rho2_ok'] for r in rows)}")
+    _emit_survey_bench(rows, (time.time() - t0) * 1e6)
     _timed("fig5_proportional_bw", fig5.run,
            lambda rows: f"curve_points={len(rows)}")
     _timed("lps_ramanujan_cert", lps_bench.run,

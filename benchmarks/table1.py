@@ -1,69 +1,41 @@
 """Paper Table 1: per-topology rho2 / bisection-bandwidth bounds vs measured.
 
-For each topology at several parameter points: build the graph, measure rho2
-(dense or Lanczos) and a witnessed bisection, and compare against the paper's
-closed forms + the Ramanujan reference at equal radix.
+Driven entirely by the ``repro.api`` survey engine: every case is a registry
+spec string, the measurement backend (dense oracle vs JAX Lanczos) is chosen
+per instance by ``n``, and the closed forms come from each family's registered
+Table-1 record — no per-topology constructor dispatch here.
 """
 from __future__ import annotations
 
-import math
-import time
 from typing import List
 
-from repro.core import bounds as B
-from repro.core import spectral as S
-from repro.core import topologies as T
-from repro.core.properties import bisection_fiedler
-from repro.core.ramanujan import lps
+from repro.api import TABLE1_COLUMNS, survey
 
-CASES = [
-    ("butterfly", lambda: T.butterfly(3, 4), B.TABLE1["butterfly"](3, 4)),
-    ("butterfly", lambda: T.butterfly(4, 4), B.TABLE1["butterfly"](4, 4)),
-    ("ccc", lambda: T.cube_connected_cycles(5), B.TABLE1["ccc"](5)),
-    ("ccc", lambda: T.cube_connected_cycles(7), B.TABLE1["ccc"](7)),
-    ("clex", lambda: T.clex(3, 3), B.TABLE1["clex"](3, 3)),
-    ("clex", lambda: T.clex(4, 3), B.TABLE1["clex"](4, 3)),
-    ("data_vortex", lambda: T.data_vortex(8, 4), B.TABLE1["data_vortex"](8, 4)),
-    ("data_vortex", lambda: T.data_vortex(16, 5), B.TABLE1["data_vortex"](16, 5)),
-    ("hypercube", lambda: T.hypercube(8), B.TABLE1["hypercube"](8)),
-    ("hypercube", lambda: T.hypercube(10), B.TABLE1["hypercube"](10)),
-    ("peterson_torus", lambda: T.peterson_torus(7, 6), B.TABLE1["peterson_torus"](7, 6)),
-    ("slimfly", lambda: T.slimfly(5), B.TABLE1["slimfly"](5)),
-    ("slimfly", lambda: T.slimfly(13), B.TABLE1["slimfly"](13)),
-    ("slimfly", lambda: T.slimfly(17), B.TABLE1["slimfly"](17)),
-    ("torus", lambda: T.torus(8, 2), B.TABLE1["torus"](8, 2)),
-    ("torus", lambda: T.torus(16, 2), B.TABLE1["torus"](16, 2)),
-    ("torus", lambda: T.torus(8, 3), B.TABLE1["torus"](8, 3)),
+SPECS = [
+    "butterfly(3,4)",
+    "butterfly(4,4)",
+    "ccc(5)",
+    "ccc(7)",
+    "clex(3,3)",
+    "clex(4,3)",
+    "data_vortex(8,4)",
+    "data_vortex(16,5)",
+    "hypercube(8)",
+    "hypercube(10)",
+    "petersen_torus(7,6)",
+    "slimfly(5)",
+    "slimfly(13)",
+    "slimfly(17)",
+    "torus(8,2)",
+    "torus(16,2)",
+    "torus(8,3)",
 ]
 
 
 def run(out_csv: str = "benchmarks/out/table1.csv") -> List[dict]:
-    import pathlib
-    rows = []
-    for name, builder, expect in CASES:
-        t0 = time.time()
-        g = builder()
-        rho2 = S.algebraic_connectivity(g)
-        bw_witness, _ = bisection_fiedler(g)
-        k = g.radix
-        row = dict(
-            topology=name, instance=g.name, nodes=g.n, radix=k,
-            rho2=round(rho2, 6), rho2_ub_paper=round(expect["rho2_ub"], 6),
-            rho2_ok=rho2 <= expect["rho2_ub"] + 1e-6,
-            bw_fiedler_lb=round(B.fiedler_bw_lb(g.n, rho2), 2),
-            bw_witness=bw_witness,
-            bw_ub_paper=round(expect["bw_ub"], 2),
-            ramanujan_rho2=round(B.ramanujan_rho2(k), 6),
-            rho2_gap_ratio=round(rho2 / B.ramanujan_rho2(k), 4),
-            seconds=round(time.time() - t0, 2),
-        )
-        rows.append(row)
-    p = pathlib.Path(out_csv)
-    p.parent.mkdir(parents=True, exist_ok=True)
-    cols = list(rows[0])
-    p.write_text("\n".join([",".join(cols)] +
-                           [",".join(str(r[c]) for c in cols) for r in rows]))
-    return rows
+    res = survey(SPECS, columns=TABLE1_COLUMNS)
+    res.to_csv(out_csv)
+    return res.rows
 
 
 if __name__ == "__main__":

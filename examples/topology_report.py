@@ -1,77 +1,47 @@
 """Generate a paper-style topology report (Table 1 + Ramanujan comparison)
-for a topology of your choice.
+for any registered topology, addressed by spec string.
 
-    PYTHONPATH=src python examples/topology_report.py --topology slimfly --q 13
-    PYTHONPATH=src python examples/topology_report.py --topology lps --p 13 --q 17
-    PYTHONPATH=src python examples/topology_report.py --topology torus --k 16 --d 2
+    PYTHONPATH=src python examples/topology_report.py "slimfly(q=13)"
+    PYTHONPATH=src python examples/topology_report.py "lps(13,17)"
+    PYTHONPATH=src python examples/topology_report.py "torus(16,2)"
+    PYTHONPATH=src python examples/topology_report.py --list
+
+There is no per-topology dispatch here: the registry parses the spec, builds
+the instance, and the lazy Analysis session computes (and backend-selects)
+every reported quantity.
 """
 import argparse
 
-import numpy as np
-
-from repro.core import bounds as B
-from repro.core import spectral as S
-from repro.core import topologies as T
-from repro.core.properties import bisection_fiedler, diameter
-from repro.core.ramanujan import is_ramanujan, lps, ramanujan_bound
+from repro.api import Analysis, REGISTRY
 
 
-def build(args):
-    t = args.topology
-    if t == "torus":
-        return T.torus(args.k, args.d)
-    if t == "hypercube":
-        return T.hypercube(args.d)
-    if t == "slimfly":
-        return T.slimfly(args.q)
-    if t == "butterfly":
-        return T.butterfly(args.k, args.s)
-    if t == "ccc":
-        return T.cube_connected_cycles(args.d)
-    if t == "clex":
-        return T.clex(args.k, args.ell)
-    if t == "data_vortex":
-        return T.data_vortex(args.a, args.c)
-    if t == "peterson_torus":
-        return T.peterson_torus(args.a, args.b)
-    if t == "dragonfly":
-        return T.dragonfly(T.complete(args.k))
-    if t == "lps":
-        return lps(args.p, args.q)
-    if t == "jellyfish":
-        return T.random_regular(args.n, args.k, seed=0)
-    raise SystemExit(f"unknown topology {t}")
+def list_families() -> str:
+    lines = ["registered topology families:"]
+    for fam in REGISTRY:
+        schema = ", ".join(f"{p}:{t.__name__}" for p, t in fam.params)
+        example = fam.default_instance or fam.name
+        lines.append(f"  {fam.name:16s} ({schema:24s})  e.g. {example}")
+    return "\n".join(lines)
 
 
 def main():
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--topology", required=True)
-    for flag, default in (("k", 4), ("d", 2), ("q", 5), ("s", 3), ("ell", 2),
-                          ("a", 5), ("b", 4), ("c", 4), ("p", 13), ("n", 128)):
-        ap.add_argument(f"--{flag}", type=int, default=default)
+    ap = argparse.ArgumentParser(
+        description=__doc__, formatter_class=argparse.RawDescriptionHelpFormatter)
+    ap.add_argument("spec", nargs="?", help='topology spec, e.g. "slimfly(q=13)"')
+    ap.add_argument("--list", action="store_true",
+                    help="list registered families and their spec schemas")
+    ap.add_argument("--dense-threshold", type=int, default=4096,
+                    help="largest n using the dense float64 oracle")
+    ap.add_argument("--lanczos-iters", type=int, default=200)
     args = ap.parse_args()
-    g = build(args)
-    k = g.radix
-    rho2 = S.algebraic_connectivity(g)
-    bw, _ = bisection_fiedler(g)
-    diam = diameter(g, vertex_transitive=False)
-    print(f"topology        : {g.name}")
-    print(f"nodes / radix   : {g.n} / {k}")
-    print(f"rho2 (measured) : {rho2:.5f}")
-    print(f"spectral gap    : {S.spectral_gap(g):.5f}" if g.n <= 4096 else
-          "spectral gap    : (n too large for dense path)")
-    print(f"diameter        : {diam}  (Alon-Milman UB: "
-          f"{B.alon_milman_diameter_ub(g.n, g.degrees().max(), rho2)})")
-    print(f"bisection       : witnessed {bw:.0f}; Fiedler floor "
-          f"{B.fiedler_bw_lb(g.n, rho2):.0f}; m/2 cap {B.first_moment_bw_ub(g.m):.0f}")
-    print(f"fault tolerance : kappa >= rho2 = {rho2:.3f}")
-    print("--- Ramanujan comparison (equal radix) ---")
-    print(f"rho2 optimum    : {B.ramanujan_rho2(k):.5f} "
-          f"(this graph: {rho2 / B.ramanujan_rho2(k) * 100:.1f}% of optimal)")
-    print(f"BW floor at opt : {B.ramanujan_bw_lb(g.n, k):.0f} edges")
-    if g.n <= 4096:
-        ok, lam = is_ramanujan(g)
-        print(f"Ramanujan?      : {ok} (lambda={lam:.4f}, bound={ramanujan_bound(k):.4f})")
+    if args.list or not args.spec:
+        print(list_families())
+        if not args.spec:
+            ap.error("a topology spec is required (see the list above)")
+        return
+    a = Analysis(args.spec, dense_threshold=args.dense_threshold,
+                 lanczos_iters=args.lanczos_iters)
+    print(a.report())
 
 
 if __name__ == "__main__":

@@ -1,0 +1,58 @@
+"""repro.api — the survey API: registry + lazy analysis + fan-out survey.
+
+Three layers, replacing the ad-hoc per-consumer dispatch that used to live in
+``benchmarks/table1.py`` / ``examples/topology_report.py`` / ``bounds.TABLE1``:
+
+* :mod:`repro.api.registry` — every topology family in one
+  :class:`~repro.api.registry.Family` record (constructor + parameter schema +
+  Table-1 closed forms), buildable from spec strings: ``build("slimfly(q=13)")``.
+* :mod:`repro.api.analysis` — :class:`~repro.api.analysis.Analysis`, a lazy
+  memoizing session over one topology that auto-selects the dense numpy oracle
+  vs the JAX Lanczos path by ``n``.
+* :mod:`repro.api.survey` — :func:`~repro.api.survey.survey`, the fan-out
+  engine behind Table 1 / Fig 5 style comparisons, batching same-shape Lanczos
+  solves and emitting rows/CSV/JSON.
+
+``analysis`` and ``survey`` are loaded lazily (PEP 562) so that importing the
+registry from ``repro.core.topologies`` (for the ``@register`` decorators)
+never pulls the numerics stack into the constructors' import cycle.
+"""
+from .registry import (Family, REGISTRY, SpecError, TopologyRegistry, build,
+                       closed_forms, families, get, parse_spec, register)
+
+__all__ = [
+    "Family", "REGISTRY", "SpecError", "TopologyRegistry", "build",
+    "closed_forms", "families", "get", "parse_spec", "register",
+    "Analysis", "survey", "SurveyResult", "DEFAULT_COLUMNS", "TABLE1_COLUMNS",
+]
+
+_LAZY = {
+    "Analysis": ("repro.api.analysis", "Analysis"),
+    "survey": ("repro.api.survey", "survey"),
+    "SurveyResult": ("repro.api.survey", "SurveyResult"),
+    "COLUMNS": ("repro.api.survey", "COLUMNS"),
+    "DEFAULT_COLUMNS": ("repro.api.survey", "DEFAULT_COLUMNS"),
+    "TABLE1_COLUMNS": ("repro.api.survey", "TABLE1_COLUMNS"),
+    "RAMANUJAN_COLUMNS": ("repro.api.survey", "RAMANUJAN_COLUMNS"),
+}
+
+
+def __getattr__(name):
+    try:
+        modname, attr = _LAZY[name]
+    except KeyError:
+        raise AttributeError(f"module 'repro.api' has no attribute {name!r}")
+    import importlib
+
+    mod = importlib.import_module(modname)
+    # pin every lazy name this module provides: importing the `survey`
+    # SUBMODULE sets a package attribute of the same name, which would
+    # otherwise shadow the survey() function on any later lookup
+    for lazy_name, (lazy_mod, lazy_attr) in _LAZY.items():
+        if lazy_mod == modname:
+            globals()[lazy_name] = getattr(mod, lazy_attr)
+    return globals()[name]
+
+
+def __dir__():
+    return sorted(set(__all__) | set(globals()))

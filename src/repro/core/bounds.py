@@ -93,6 +93,11 @@ def active_subset_bw_lb(alpha: float, n: int, k: float) -> float:
 # --------------------------------------------------------------------------
 # Table 1: per-topology closed forms.  Each entry maps parameters to
 # dict(nodes, radix, rho2_ub, bw_ub) exactly as printed in the paper.
+#
+# NOTE: the registry (repro.api.registry) is now the canonical home of these
+# expressions — each Family record carries its closed_forms callable, wired up
+# at registration time in core/topologies.py.  TABLE1 remains as the shared
+# implementation + a backwards-compatible name-keyed view.
 # --------------------------------------------------------------------------
 
 def _butterfly(k: int, s: int) -> Dict:
@@ -171,7 +176,8 @@ TABLE1: Dict[str, Callable[..., Dict]] = {
     "data_vortex": _data_vortex,
     "dragonfly": _dragonfly,
     "hypercube": _hypercube,
-    "peterson_torus": _peterson_torus,
+    "petersen_torus": _peterson_torus,
+    "peterson_torus": _peterson_torus,   # deprecated misspelling (kept for compat)
     "slimfly": _slimfly,
     "torus": _torus,
 }

@@ -9,9 +9,11 @@ Conventions
 * Undirected multigraphs with optional weighted self-loops.  Self-loops
   contribute their weight once to the adjacency diagonal (paper convention:
   a self-loop regularizes the degree but never affects bisection/diameter).
-* ``edges``  : (m, 2) int32 array of undirected edges (u, v), u != v.
-             Parallel edges are repeated rows.
-* ``loops``  : (n,) float array of self-loop weights (usually 0/1, may be -1
+* ``edges``  : (m, 2) int64 array of undirected edges (u, v), u != v.
+             Parallel edges are repeated rows.  (``__post_init__`` casts to
+             int64; the int32 narrowing happens only in ``neighbor_table`` /
+             ``gather_operands``, the device-facing forms.)
+* ``loops``  : (n,) float64 array of self-loop weights (usually 0/1, may be -1
              for the signed graphs of the CCC analysis).
 """
 from __future__ import annotations
@@ -28,8 +30,8 @@ __all__ = ["Topology"]
 class Topology:
     name: str
     n: int
-    edges: np.ndarray                      # (m, 2) int32, u != v
-    loops: Optional[np.ndarray] = None     # (n,) float32 self-loop weights
+    edges: np.ndarray                      # (m, 2) int64, u != v
+    loops: Optional[np.ndarray] = None     # (n,) float64 self-loop weights
     meta: Dict = dataclasses.field(default_factory=dict)
 
     # -- construction -----------------------------------------------------

@@ -17,6 +17,7 @@ from typing import List, Optional, Tuple
 
 import numpy as np
 
+from ..api.registry import register
 from .graphs import Topology
 
 __all__ = ["lps", "lps_size", "is_ramanujan", "ramanujan_bound", "alon_boppana_lb",
@@ -89,6 +90,17 @@ def lps_size(p: int, q: int) -> int:
     return p * (p * p - 1) // 2 if legendre(q, p) == 1 else p * (p * p - 1)
 
 
+def _cf_lps(p: int, q: int) -> dict:
+    """Registry closed forms: exact size/radix + the Ramanujan rho2 floor
+    (Definition 1 gives lambda <= 2 sqrt(q), hence rho2 >= q + 1 - 2 sqrt(q))."""
+    k = q + 1
+    return dict(nodes=lps_size(p, q), radix=k,
+                rho2_lb=k - 2.0 * math.sqrt(k - 1.0))
+
+
+@register("lps", params=dict(p=int, q=int), closed_forms=_cf_lps,
+          tags=("vertex_transitive",), aliases=("ramanujan",),
+          default_instance="lps(5,13)")
 def lps(p: int, q: int) -> Topology:
     """The LPS Ramanujan graph X^{p,q} (Definition 2)."""
     for x, nm in ((p, "p"), (q, "q")):

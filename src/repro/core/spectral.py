@@ -23,8 +23,14 @@ __all__ = [
     "adjacency_spectrum", "laplacian_spectrum", "normalized_laplacian_spectrum",
     "algebraic_connectivity", "spectral_gap", "lambda_nontrivial",
     "fiedler_vector", "table_matvec", "lanczos_tridiag", "lanczos_extremes",
-    "rho2_lanczos",
+    "lanczos_top_ritz", "rho2_lanczos", "rho2_lanczos_batched",
+    "fiedler_lanczos", "DENSE_THRESHOLD",
 ]
+
+#: graphs at or below this order use the dense float64 oracle; larger ones go
+#: through the matrix-free JAX Lanczos path.  The Analysis/survey API reads
+#: this as its default auto-selection cutover.
+DENSE_THRESHOLD = 4096
 
 
 # --------------------------------------------------------------------------
@@ -46,7 +52,7 @@ def normalized_laplacian_spectrum(topo: Topology) -> np.ndarray:
 def algebraic_connectivity(topo: Topology, method: str = "auto",
                            iters: int = 200, seed: int = 0) -> float:
     """rho_2: second-smallest Laplacian eigenvalue."""
-    if method == "dense" or (method == "auto" and topo.n <= 4096):
+    if method == "dense" or (method == "auto" and topo.n <= DENSE_THRESHOLD):
         return float(laplacian_spectrum(topo)[1])
     return rho2_lanczos(topo, iters=iters, seed=seed)
 
@@ -90,28 +96,15 @@ def table_matvec(table: np.ndarray, loops: Optional[np.ndarray] = None
     return mv
 
 
-@functools.partial(jax.jit, static_argnames=("matvec", "m"))
-def lanczos_tridiag(matvec: Callable, v0: jnp.ndarray, m: int,
-                    deflate: Optional[jnp.ndarray] = None
-                    ) -> Tuple[jnp.ndarray, jnp.ndarray]:
-    """m-step Lanczos with full (two-pass) reorthogonalization.
+def _lanczos_scan(op: Callable, v0: jnp.ndarray, m: int
+                  ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """m-step Lanczos recurrence with full (two-pass) reorthogonalization.
 
-    ``deflate``: optional (d, n) orthonormal rows projected out of the operator
-    (P A P with P = I - D^T D), used to remove the trivial ±k eigenpairs.
-    Returns (alpha[m], beta[m-1]) of the symmetric tridiagonal T.
+    Traceable building block shared by the single-graph, batched (vmap), and
+    Ritz-vector entry points.  Returns (alpha[m], beta[m], V[(m+1), n]).
     """
     n = v0.shape[0]
-    v0 = v0.astype(jnp.float32)
-
-    def project(x):
-        if deflate is not None:
-            x = x - deflate.T @ (deflate @ x)
-        return x
-
-    def op(x):
-        return project(matvec(project(x)))
-
-    v = project(v0)
+    v = v0.astype(jnp.float32)
     v = v / jnp.linalg.norm(v)
     V0 = jnp.zeros((m + 1, n), dtype=jnp.float32).at[0].set(v)
 
@@ -131,9 +124,39 @@ def lanczos_tridiag(matvec: Callable, v0: jnp.ndarray, m: int,
         V = V.at[j + 1].set(v_next)
         return (V, v_next, v, beta), (alpha, beta)
 
-    (_, _, _, _), (alphas, betas) = jax.lax.scan(
+    (V, _, _, _), (alphas, betas) = jax.lax.scan(
         body, (V0, v, jnp.zeros_like(v), jnp.float32(0.0)), jnp.arange(m))
+    return alphas, betas, V
+
+
+@functools.partial(jax.jit, static_argnames=("matvec", "m"))
+def lanczos_tridiag(matvec: Callable, v0: jnp.ndarray, m: int,
+                    deflate: Optional[jnp.ndarray] = None
+                    ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """m-step Lanczos with full (two-pass) reorthogonalization.
+
+    ``deflate``: optional (d, n) orthonormal rows projected out of the operator
+    (P A P with P = I - D^T D), used to remove the trivial ±k eigenpairs.
+    Returns (alpha[m], beta[m-1]) of the symmetric tridiagonal T.
+    """
+    alphas, betas, _ = _lanczos_with_basis(matvec, v0, m, deflate)
     return alphas, betas[:-1]
+
+
+@functools.partial(jax.jit, static_argnames=("matvec", "m"))
+def _lanczos_with_basis(matvec: Callable, v0: jnp.ndarray, m: int,
+                        deflate: Optional[jnp.ndarray] = None
+                        ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    def project(x):
+        if deflate is not None:
+            x = x - deflate.T @ (deflate @ x)
+        return x
+
+    def op(x):
+        return project(matvec(project(x)))
+
+    v = project(v0.astype(jnp.float32))
+    return _lanczos_scan(op, v, m)
 
 
 def _tridiag_eigvals(alphas: np.ndarray, betas: np.ndarray) -> np.ndarray:
@@ -162,6 +185,34 @@ def lanczos_extremes(matvec: Callable, n: int, m: int = 200, seed: int = 0,
     return float(ev[-1]), float(ev[0])
 
 
+def lanczos_top_ritz(matvec: Callable, n: int, m: int = 200, seed: int = 0,
+                     deflate_vectors: Optional[Sequence[np.ndarray]] = None
+                     ) -> Tuple[float, np.ndarray]:
+    """Top eigenpair (lambda_max, Ritz vector) of the (deflated) operator.
+
+    The Ritz vector is V^T y for the top eigenvector y of the tridiagonal T —
+    the matrix-free analogue of the dense ``fiedler_vector`` when the operator
+    is the ones-deflated adjacency of a regular graph.
+    """
+    key = jax.random.PRNGKey(seed)
+    v0 = jax.random.normal(key, (n,), dtype=jnp.float32)
+    deflate = None
+    if deflate_vectors:
+        D = np.stack([d / np.linalg.norm(d) for d in deflate_vectors])
+        Q, _ = np.linalg.qr(D.T)
+        deflate = jnp.asarray(Q.T, dtype=jnp.float32)
+    alphas, betas, V = _lanczos_with_basis(matvec, v0, m, deflate)
+    alphas = np.asarray(alphas, dtype=np.float64)
+    betas = np.asarray(betas, dtype=np.float64)[:-1]
+    T = np.diag(alphas) + np.diag(betas, 1) + np.diag(betas, -1)
+    w, y = np.linalg.eigh(T)
+    ritz = np.asarray(V)[:m].T @ y[:, -1]
+    nrm = np.linalg.norm(ritz)
+    if nrm > 0:
+        ritz = ritz / nrm
+    return float(w[-1]), ritz
+
+
 def rho2_lanczos(topo: Topology, iters: int = 200, seed: int = 0) -> float:
     """rho_2 = k - lambda_2 for regular graphs, via ones-deflated Lanczos.
 
@@ -171,14 +222,110 @@ def rho2_lanczos(topo: Topology, iters: int = 200, seed: int = 0) -> float:
     covers near-complete graphs where lambda_2 < 0).
     """
     k = topo.radix
-    mv = table_matvec(topo.neighbor_table(), topo.loops)
+    tab, w = topo.gather_operands()     # valid for any multigraph (loops folded)
+    mv = table_matvec(tab, w)
     defl = [np.ones(topo.n)]
     if topo.meta.get("bipartite"):
-        import networkx as nx
-
-        color = nx.bipartite.color(topo.to_networkx())
-        sign = np.array([1.0 if color[i] == 0 else -1.0 for i in range(topo.n)])
-        defl.append(sign)
+        defl.append(_bipartite_sign(topo))
     lmax, _ = lanczos_extremes(mv, topo.n, m=iters, seed=seed,
                                deflate_vectors=defl)
     return float(k - lmax)
+
+
+def _bipartite_sign(topo: Topology) -> np.ndarray:
+    import networkx as nx
+
+    color = nx.bipartite.color(topo.to_networkx())
+    return np.array([1.0 if color[i] == 0 else -1.0 for i in range(topo.n)])
+
+
+def trivial_deflation(topo: Topology) -> list:
+    """Deflation basis removing the trivial adjacency eigenpairs: the all-ones
+    (+k) vector, plus the 2-coloring sign vector (-k) for bipartite graphs.
+
+    Bipartiteness is detected (O(m) 2-coloring) rather than read from meta —
+    even-k tori, hypercubes, etc. are bipartite without declaring it.
+    """
+    defl = [np.ones(topo.n)]
+    if topo.meta.get("bipartite") or _is_bipartite(topo):
+        defl.append(_bipartite_sign(topo))
+    return defl
+
+
+def _is_bipartite(topo: Topology) -> bool:
+    import networkx as nx
+
+    return bool(nx.is_bipartite(topo.to_networkx()))
+
+
+def fiedler_lanczos(topo: Topology, iters: int = 200, seed: int = 0) -> np.ndarray:
+    """Approximate Fiedler vector, matrix-free (device-scale graphs).
+
+    For k-regular G the Laplacian eigenvector of rho_2 equals the adjacency
+    eigenvector of lambda_2, which is the top Ritz vector of the ones-deflated
+    adjacency operator.  Used by the Analysis/survey layer to witness
+    bisections when n is too large for the dense eigendecomposition.
+    """
+    tab, w = topo.gather_operands()
+    mv = table_matvec(tab, w)
+    _, ritz = lanczos_top_ritz(mv, topo.n, m=iters, seed=seed,
+                               deflate_vectors=[np.ones(topo.n)])
+    return ritz
+
+
+@functools.partial(jax.jit, static_argnames=("m",))
+def _lanczos_tridiag_batched(tables: jnp.ndarray, weights: jnp.ndarray,
+                             v0s: jnp.ndarray, m: int
+                             ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """vmapped ones-deflated Lanczos over B same-shape neighbor tables.
+
+    ``tables``: (B, n, k) int32, ``weights``: (B, n) float32 per-vertex loop
+    weights, ``v0s``: (B, n) float32 start vectors.  Returns stacked
+    (alphas (B, m), betas (B, m)).
+    """
+    def run(tab, lw, v0):
+        def op(x):
+            x = x - jnp.mean(x)                      # project out ones
+            y = jnp.sum(x[tab], axis=1) + lw * x
+            return y - jnp.mean(y)
+
+        alphas, betas, _ = _lanczos_scan(op, v0 - jnp.mean(v0), m)
+        return alphas, betas
+
+    return jax.vmap(run)(tables, weights, v0s)
+
+
+def rho2_lanczos_batched(topos: Sequence[Topology], iters: int = 200,
+                         seed: int = 0) -> list:
+    """rho_2 for a batch of same-shape regular graphs in ONE vmapped solve.
+
+    All topologies must share (n, table-width) so their neighbor tables stack;
+    bipartite graphs are rejected (their -k pair needs per-graph deflation) —
+    the survey layer routes those through :func:`rho2_lanczos` one by one.
+    """
+    if not topos:
+        return []
+    shapes = set()
+    tabs, lws = [], []
+    for t in topos:
+        if t.meta.get("bipartite"):
+            raise ValueError(f"{t.name}: bipartite graphs cannot be batched")
+        tab, w = t.gather_operands()
+        shapes.add(tab.shape)
+        tabs.append(tab)
+        lws.append(w)
+    if len(shapes) != 1:
+        raise ValueError(f"neighbor tables must share one shape, got {shapes}")
+    key = jax.random.PRNGKey(seed)
+    n = topos[0].n
+    v0s = jax.random.normal(key, (len(topos), n), dtype=jnp.float32)
+    alphas, betas = _lanczos_tridiag_batched(
+        jnp.asarray(np.stack(tabs), dtype=jnp.int32),
+        jnp.asarray(np.stack(lws), dtype=jnp.float32), v0s, iters)
+    alphas = np.asarray(alphas, dtype=np.float64)
+    betas = np.asarray(betas, dtype=np.float64)
+    out = []
+    for i, t in enumerate(topos):
+        ev = _tridiag_eigvals(alphas[i], betas[i][:-1])
+        out.append(float(t.radix - ev[-1]))
+    return out

@@ -4,34 +4,113 @@ Each constructor returns a :class:`repro.core.graphs.Topology`.  The
 constructions follow the paper's definitions exactly (Definitions 3-13); where
 an implementation has degree irregularities the paper regularizes with
 self-loops, and we do the same (Data Vortex inner/outer rings).
+
+Every family is registered with :mod:`repro.api.registry` via the
+``@register`` decorators below, carrying its parameter schema and analytic
+Table-1 closed forms, so consumers build instances from spec strings
+(``repro.api.build("slimfly(q=13)")``) instead of dispatching by hand.
 """
 from __future__ import annotations
 
 import itertools
+import math
+import warnings
 from typing import Callable, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from ..api.registry import register
+from .bounds import TABLE1 as _T1
 from .graphs import Topology
 
 __all__ = [
     "path", "path_looped", "cycle", "complete", "hypercube", "generalized_grid",
     "torus", "butterfly", "data_vortex", "cube_connected", "cube_connected_cycles",
-    "clex", "g_connected_h", "dragonfly", "slimfly", "peterson_torus", "fat_tree",
-    "random_regular", "petersen",
+    "clex", "g_connected_h", "dragonfly", "slimfly", "petersen_torus",
+    "peterson_torus", "fat_tree", "random_regular", "petersen",
 ]
+
+
+# --------------------------------------------------------------------------
+# closed-form adapters for the registry.  Table-1 families reuse bounds.TABLE1
+# (the analytic content stays in bounds.py); the elemental graphs have exact
+# spectra, flagged with rho2_exact=True so tests assert equality, not <=.
+# --------------------------------------------------------------------------
+
+def _cf_exact(table_entry: Callable[..., dict]) -> Callable[..., dict]:
+    """Table-1 entry whose rho2_ub is attained exactly by the construction."""
+    def forms(**params) -> dict:
+        return dict(table_entry(**params), rho2_exact=True)
+    return forms
+
+
+def _cf_path(n: int) -> dict:
+    return dict(nodes=n, rho2_ub=2.0 * (1 - math.cos(math.pi / n)),
+                rho2_exact=True)
+
+
+def _cf_path_looped(n: int) -> dict:
+    return dict(nodes=n, radix=2, rho2_ub=2.0 * (1 - math.cos(math.pi / n)),
+                rho2_exact=True)
+
+
+def _cf_cycle(n: int) -> dict:
+    return dict(nodes=n, radix=2, rho2_ub=2.0 * (1 - math.cos(2 * math.pi / n)),
+                rho2_exact=True)
+
+
+def _cf_complete(n: int) -> dict:
+    return dict(nodes=n, radix=n - 1, rho2_ub=float(n), rho2_exact=True,
+                bw_ub=float((n // 2) * (n - n // 2)))
+
+
+def _cf_petersen() -> dict:
+    return dict(nodes=10, radix=3, rho2_ub=2.0, rho2_exact=True)
+
+
+def _cf_grid(*ks: int) -> dict:
+    return dict(nodes=int(np.prod(ks)),
+                rho2_ub=2.0 * (1 - math.cos(math.pi / max(ks))),
+                rho2_exact=True)
+
+
+def _cf_fat_tree(depth: int, base_mult: int = 1) -> dict:
+    return dict(nodes=2 ** (depth + 1) - 1)
+
+
+def _cf_random_regular(n: int, k: int, seed: int = 0) -> dict:
+    return dict(nodes=n, radix=k)
+
+
+def _cf_dragonfly(h: str = "complete(6)") -> dict:
+    """Corollary 2 for DragonFly(H); bw_ub only when H is complete."""
+    from ..api.registry import parse_spec
+
+    fam, bound = parse_spec(h)
+    if fam.name == "complete":
+        hn = bound["n"]
+        h_edges = hn * (hn - 1) // 2
+        h_bw = (hn // 2) * (hn - hn // 2)
+        return _T1["dragonfly"](h_nodes=hn, h_edges=h_edges, h_bw=h_bw)
+    H = fam.build(**bound)
+    return dict(nodes=(H.n + 1) * H.n, radix=2.0 * H.m / H.n + 1,
+                rho2_ub=1.0 + H.n / (2.0 * H.m))
 
 
 # --------------------------------------------------------------------------
 # elemental graphs (§2): path, looped path, cycle — the factors of grid-likes
 # --------------------------------------------------------------------------
 
+@register("path", params=dict(n=int), closed_forms=_cf_path,
+          default_instance="path(7)")
 def path(n: int) -> Topology:
     """P_n: the path on n vertices (length n-1).  Adjacency spectrum 2cos(pi j/(n+1))."""
     e = np.stack([np.arange(n - 1), np.arange(1, n)], axis=1)
     return Topology(f"path({n})", n, e)
 
 
+@register("path_looped", params=dict(n=int), closed_forms=_cf_path_looped,
+          default_instance="path_looped(6)")
 def path_looped(n: int) -> Topology:
     """P'_n: path with self-loops at both endpoints.  Spectrum 2cos(pi j/n)."""
     e = np.stack([np.arange(n - 1), np.arange(1, n)], axis=1)
@@ -40,6 +119,8 @@ def path_looped(n: int) -> Topology:
     return Topology(f"path_looped({n})", n, e, loops=loops)
 
 
+@register("cycle", params=dict(n=int), closed_forms=_cf_cycle,
+          tags=("vertex_transitive",), default_instance="cycle(8)")
 def cycle(n: int) -> Topology:
     """C_n.  Adjacency spectrum 2cos(2 pi j / n)."""
     if n < 3:
@@ -48,11 +129,16 @@ def cycle(n: int) -> Topology:
     return Topology(f"cycle({n})", n, e)
 
 
+@register("complete", params=dict(n=int), closed_forms=_cf_complete,
+          tags=("vertex_transitive",), default_instance="complete(8)")
 def complete(n: int) -> Topology:
+    """K_n: the complete graph (rho2 = n exactly)."""
     e = np.array(list(itertools.combinations(range(n), 2)), dtype=np.int64)
     return Topology(f"complete({n})", n, e)
 
 
+@register("petersen", closed_forms=_cf_petersen, tags=("vertex_transitive",),
+          default_instance="petersen")
 def petersen() -> Topology:
     """The Petersen graph, labeled: outer 5-cycle 0-4, inner pentagram 5-9, spokes i~i+5."""
     outer = [(i, (i + 1) % 5) for i in range(5)]
@@ -81,6 +167,9 @@ def _cartesian_product(a: Topology, b: Topology, name: str) -> Topology:
 
 def generalized_grid(ks: Sequence[int]) -> Topology:
     """G_{k_1..k_d} = P_{k_1} □ ... □ P_{k_d} (Definition 4)."""
+    ks = list(ks)
+    if not ks:
+        raise ValueError("grid needs at least one extent")
     g = path(ks[0])
     for k in ks[1:]:
         g = _cartesian_product(g, path(k), "tmp")
@@ -88,6 +177,15 @@ def generalized_grid(ks: Sequence[int]) -> Topology:
     return g
 
 
+@register("grid", params=dict(ks=int), variadic=True, closed_forms=_cf_grid,
+          aliases=("generalized_grid",), default_instance="grid(3,4,2)")
+def _grid_from_spec(*ks: int) -> Topology:
+    """Registry entry point for :func:`generalized_grid` — ``grid(3,4,2)``."""
+    return generalized_grid(ks)
+
+
+@register("hypercube", params=dict(d=int), closed_forms=_cf_exact(_T1["hypercube"]),
+          tags=("vertex_transitive",), default_instance="hypercube(5)")
 def hypercube(d: int) -> Topology:
     """Q_d = P_2^{□ d} (Definition 3).  rho_2 = 2, BW = 2^{d-1}."""
     g = generalized_grid([2] * d)
@@ -96,6 +194,8 @@ def hypercube(d: int) -> Topology:
     return g
 
 
+@register("torus", params=dict(k=int, d=int), closed_forms=_cf_exact(_T1["torus"]),
+          tags=("vertex_transitive",), default_instance="torus(6,2)")
 def torus(k: int, d: int) -> Topology:
     """C_k^{□ d} (Definition 5).  2d-regular on k^d vertices; rho2 = 2(1-cos(2 pi /k))."""
     if k < 3:
@@ -112,6 +212,9 @@ def torus(k: int, d: int) -> Topology:
 # grid variants (§4.2)
 # --------------------------------------------------------------------------
 
+@register("butterfly", params=dict(k=int, s=int),
+          closed_forms=lambda **p: _T1["butterfly"](**p),
+          default_instance="butterfly(3,3)")
 def butterfly(k: int, s: int) -> Topology:
     """k-ary s-fly Butterfly, cyclic arrangement (Definition 6).
 
@@ -137,6 +240,9 @@ def butterfly(k: int, s: int) -> Topology:
     return t
 
 
+@register("data_vortex", params=dict(A=int, C=int),
+          closed_forms=lambda **p: _T1["data_vortex"](**p),
+          default_instance="data_vortex(5,4)")
 def data_vortex(A: int, C: int) -> Topology:
     """Data Vortex (Definition 7) with the paper's self-loop regularization.
 
@@ -194,6 +300,8 @@ def cube_connected(G: Topology, name: Optional[str] = None) -> Topology:
     return Topology(name or f"cube_connected({G.name})", n, e, meta=dict(d=d))
 
 
+@register("ccc", params=dict(d=int), closed_forms=lambda **p: _T1["ccc"](**p),
+          aliases=("cube_connected_cycles",), default_instance="ccc(4)")
 def cube_connected_cycles(d: int) -> Topology:
     """CCC(d) = CC(C_d, d): 3-regular on d * 2^d vertices."""
     g = cube_connected(cycle(d), name=f"ccc({d})")
@@ -201,6 +309,9 @@ def cube_connected_cycles(d: int) -> Topology:
     return g
 
 
+@register("clex", params=dict(k=int, ell=int),
+          closed_forms=lambda **p: _T1["clex"](**p),
+          default_instance="clex(3,3)")
 def clex(k: int, ell: int, G: Optional[Topology] = None) -> Topology:
     """(Generalized) CLEX C(G, ell) on k^ell vertices (Definition 9 / Lemma 3).
 
@@ -317,6 +428,19 @@ def dragonfly(H: Topology) -> Topology:
     return Topology(f"dragonfly({H.name})", n, e, meta=dict(groups=ng))
 
 
+@register("dragonfly", params=dict(h=str), defaults=dict(h="complete(6)"),
+          closed_forms=_cf_dragonfly,
+          default_instance="dragonfly(h='complete(6)')")
+def _dragonfly_from_spec(h: str = "complete(6)") -> Topology:
+    """Registry entry point for :func:`dragonfly` — the group graph H is
+    itself a spec string, e.g. ``dragonfly(h='complete(6)')``."""
+    from ..api.registry import build as _build
+
+    return dragonfly(_build(h))
+
+
+@register("slimfly", params=dict(q=int), closed_forms=_cf_exact(_T1["slimfly"]),
+          tags=("vertex_transitive",), default_instance="slimfly(5)")
 def slimfly(q: int) -> Topology:
     """SlimFly MMS graph (Definition 13) for prime q ≡ 1 (mod 4).
 
@@ -364,8 +488,18 @@ def slimfly(q: int) -> Topology:
                     meta=dict(q=q))
 
 
-def peterson_torus(a: int, b: int) -> Topology:
-    """Peterson Torus PT(a, b) (Definition 11); 4-regular on 10ab vertices."""
+@register("petersen_torus", params=dict(a=int, b=int),
+          closed_forms=lambda **p: _T1["petersen_torus"](**p),
+          deprecated_aliases=("peterson_torus",),
+          default_instance="petersen_torus(5,4)")
+def petersen_torus(a: int, b: int) -> Topology:
+    """Petersen Torus PT(a, b) (Definition 11); 4-regular on 10ab vertices.
+
+    Historically exported as ``peterson_torus`` — the paper's graph is
+    Petersen's, so the correctly-spelled name is canonical and the old one is
+    kept as a deprecated alias (both as a module attribute and in the
+    registry).
+    """
     if not (a >= 2 and b >= 2 and (a % 2 == 1 or b % 2 == 1)):
         raise ValueError("need a,b >= 2 with at least one odd")
     P = petersen()
@@ -385,9 +519,19 @@ def peterson_torus(a: int, b: int) -> Topology:
     edges.append(np.stack([vid(xs, ys, 7), vid(xs - 1, ys + 1, 8)], axis=1))   # reverse diag
     edges.append(np.stack([vid(xs, ys, 0), vid(xs + a // 2, ys + b // 2, 5)], axis=1))  # diameter
     e = np.concatenate(edges, axis=0)
-    return Topology(f"peterson_torus({a},{b})", n, e, meta=dict(a=a, b=b))
+    return Topology(f"petersen_torus({a},{b})", n, e, meta=dict(a=a, b=b))
 
 
+def peterson_torus(a: int, b: int) -> Topology:
+    """Deprecated misspelling of :func:`petersen_torus`."""
+    warnings.warn("peterson_torus is deprecated; use petersen_torus",
+                  DeprecationWarning, stacklevel=2)
+    return petersen_torus(a, b)
+
+
+@register("fat_tree", params=dict(depth=int, base_mult=int),
+          defaults=dict(base_mult=1), closed_forms=_cf_fat_tree,
+          default_instance="fat_tree(3)")
 def fat_tree(depth: int, base_mult: int = 1) -> Topology:
     """Binary fat tree of given depth (Fig. 3's reduction example).
 
@@ -406,6 +550,9 @@ def fat_tree(depth: int, base_mult: int = 1) -> Topology:
                     meta=dict(depth=depth))
 
 
+@register("random_regular", params=dict(n=int, k=int, seed=int),
+          defaults=dict(seed=0), closed_forms=_cf_random_regular,
+          aliases=("jellyfish",), default_instance="random_regular(64,4,seed=1)")
 def random_regular(n: int, k: int, seed: int = 0) -> Topology:
     """Jellyfish-style random k-regular graph (configuration model, simple)."""
     import networkx as nx

@@ -1,0 +1,138 @@
+"""Analysis session + survey engine: laziness, backend auto-selection,
+Lanczos batching, and the consumer-facing row/CSV/JSON contract."""
+import json
+
+import numpy as np
+import pytest
+
+from repro.api import (Analysis, DEFAULT_COLUMNS, TABLE1_COLUMNS, survey)
+from repro.core import spectral as S
+from repro.core import topologies as T
+
+
+def test_analysis_dense_backend_small_n():
+    a = Analysis("torus(6,2)")
+    assert a.backend == "dense"
+    assert a.rho2 == pytest.approx(2 * (1 - np.cos(2 * np.pi / 6)))
+    assert len(a.spectrum) == 36
+    assert a.diameter == 6
+    assert a.ramanujan["is_ramanujan"] in (True, False)
+
+
+def test_analysis_lanczos_backend_above_threshold():
+    a = Analysis("torus(12,2)", dense_threshold=100)
+    assert a.backend == "lanczos"
+    dense = float(S.laplacian_spectrum(T.torus(12, 2))[1])
+    assert a.rho2 == pytest.approx(dense, rel=1e-3)
+    # full spectrum is a dense-only feature
+    with pytest.raises(RuntimeError, match="dense"):
+        a.spectrum
+    # witnessed bisection still available: Ritz-approximated Fiedler sweep
+    bw = a.bisection_witness
+    assert bw >= a.bounds["fiedler_bw_lb"] - 1e-6
+    assert bw <= a.bounds["first_moment_bw_ub"] + 1e-6
+
+
+def test_analysis_memoizes():
+    a = Analysis("hypercube(6)")
+    r1 = a.rho2
+    assert a.__dict__["rho2"] == r1          # cached_property populated
+    assert a.fiedler is a.fiedler            # same object, not recomputed
+
+
+def test_analysis_accepts_topology_and_spec():
+    g = T.hypercube(5)
+    assert Analysis(g).rho2 == pytest.approx(2.0)
+    assert Analysis("hypercube(5)").rho2 == pytest.approx(2.0)
+
+
+def test_analysis_irregular_graph():
+    a = Analysis("path(7)")
+    assert a.radix is None
+    assert a.rho2 == pytest.approx(2 * (1 - np.cos(np.pi / 7)))
+    with pytest.raises(RuntimeError, match="irregular"):
+        a.ramanujan
+
+
+def test_analysis_loop_regularized_lanczos():
+    """data_vortex needs the gather_operands (padded-table) matvec path."""
+    g = T.data_vortex(5, 4)
+    dense = float(S.laplacian_spectrum(g)[1])
+    a = Analysis(g, dense_threshold=10, lanczos_iters=150)
+    assert a.backend == "lanczos"
+    assert a.rho2 == pytest.approx(dense, abs=1e-3)
+
+
+def test_report_contains_key_lines():
+    rep = Analysis("slimfly(5)").report()
+    for fragment in ["topology        : slimfly(5)", "rho2 (measured) : 5.00000",
+                     "Ramanujan comparison", "backend         : dense"]:
+        assert fragment in rep
+
+
+def test_survey_rows_and_columns():
+    res = survey(["torus(6,2)", "hypercube(5)"], columns=TABLE1_COLUMNS)
+    assert len(res) == 2
+    assert res.columns == TABLE1_COLUMNS
+    for row in res:
+        assert row["rho2_ok"] is True
+        assert set(TABLE1_COLUMNS) == set(row)
+
+
+def test_survey_routes_large_instances_through_lanczos():
+    res = survey(["torus(6,2)", "torus(16,2)"], dense_threshold=100,
+                 columns=["spec", "nodes", "backend", "rho2", "rho2_ok"])
+    by_spec = {r["spec"]: r for r in res}
+    assert by_spec["torus(6,2)"]["backend"] == "dense"
+    assert by_spec["torus(16,2)"]["backend"] == "lanczos"
+    assert by_spec["torus(16,2)"]["rho2_ok"] is True
+
+
+def test_survey_batches_same_shape_lanczos_solves():
+    """Two same-(n, k) graphs share one vmapped solve; values match dense."""
+    specs = ["torus(12,2)", "random_regular(144,4,seed=2)"]
+    analyses = [Analysis(s, dense_threshold=50) for s in specs]
+    res = survey(analyses, columns=["spec", "backend", "rho2"])
+    # batching pre-populated the caches before row evaluation
+    assert all("rho2" in a.__dict__ for a in analyses)
+    ref = [float(S.laplacian_spectrum(T.torus(12, 2))[1]),
+           float(S.laplacian_spectrum(T.random_regular(144, 4, seed=2))[1])]
+    for row, expect in zip(res.rows, ref):
+        assert row["backend"] == "lanczos"
+        assert row["rho2"] == pytest.approx(expect, abs=2e-3)
+
+
+def test_survey_unknown_column():
+    with pytest.raises(KeyError, match="unknown survey column"):
+        survey(["torus(6,2)"], columns=["nope"])
+
+
+def test_survey_csv_json(tmp_path):
+    res = survey(["torus(6,2)"], columns=["spec", "nodes", "rho2"])
+    csv_path = tmp_path / "out.csv"
+    text = res.to_csv(str(csv_path))
+    assert csv_path.read_text() == text
+    assert text.splitlines()[0] == "spec,nodes,rho2"
+    # spec fields contain commas, so they are CSV-quoted
+    assert text.splitlines()[1].startswith('"torus(6,2)",36,')
+    import csv as csv_mod
+    import io
+    parsed = list(csv_mod.reader(io.StringIO(text)))
+    assert parsed[1][0] == "torus(6,2)" and parsed[1][1] == "36"
+    data = json.loads(res.to_json(str(tmp_path / "out.json")))
+    assert data[0]["nodes"] == 36
+
+
+def test_batched_rho2_matches_dense_for_loop_graphs():
+    """gather_operands batching handles self-loop regularized graphs too."""
+    topos = [T.data_vortex(5, 4), T.data_vortex(5, 4)]
+    vals = S.rho2_lanczos_batched(topos, iters=150)
+    dense = float(S.laplacian_spectrum(topos[0])[1])
+    assert vals[0] == pytest.approx(dense, abs=1e-3)
+    assert vals[1] == pytest.approx(dense, abs=1e-3)
+
+
+def test_default_columns_all_known():
+    res = survey(["slimfly(5)"])      # exercises DEFAULT_COLUMNS end to end
+    assert res.columns == DEFAULT_COLUMNS
+    assert res.rows[0]["rho2"] == pytest.approx(5.0)

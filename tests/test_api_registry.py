@@ -1,0 +1,161 @@
+"""Registry round-trip: every registered family builds from its spec string,
+reports the expected n/radix, and its registered closed-form rho2 matches the
+Analysis measurement on a small instance — the old TABLE1 consistency check,
+now enforced uniformly for all families."""
+import warnings
+
+import numpy as np
+import pytest
+
+from repro.api import (Analysis, REGISTRY, SpecError, build, closed_forms,
+                       families, get, parse_spec)
+from repro.core import bounds as B
+
+
+ALL_FAMILIES = families()
+
+
+def test_every_paper_family_is_registered():
+    expected = {"path", "path_looped", "cycle", "complete", "petersen", "grid",
+                "hypercube", "torus", "butterfly", "data_vortex", "ccc",
+                "clex", "dragonfly", "slimfly", "petersen_torus", "fat_tree",
+                "random_regular", "lps"}
+    assert expected <= set(ALL_FAMILIES)
+
+
+@pytest.mark.parametrize("family", ALL_FAMILIES)
+def test_family_roundtrip(family):
+    """build(default_instance) agrees with the registered closed forms."""
+    fam = get(family)
+    assert fam.default_instance, f"{family} needs a default_instance spec"
+    g = build(fam.default_instance)
+    assert g.meta["family"] == family
+    a = Analysis(g)
+    cf = a.closed_forms
+    if cf is None:
+        pytest.skip(f"{family} has no closed forms")
+    assert g.n == cf["nodes"]
+    if "radix" in cf:
+        assert abs(g.radix - cf["radix"]) < 1e-9
+    if "rho2_ub" in cf:
+        if cf.get("rho2_exact"):
+            assert abs(a.rho2 - cf["rho2_ub"]) < 1e-6 * max(1.0, cf["rho2_ub"])
+        else:
+            assert a.rho2 <= cf["rho2_ub"] + 1e-6
+    if "rho2_lb" in cf:
+        assert a.rho2 >= cf["rho2_lb"] - 1e-6
+
+
+@pytest.mark.parametrize("family", ALL_FAMILIES)
+def test_spec_string_roundtrip(family):
+    """The spec stamped into meta re-parses to the same family + parameters."""
+    fam = get(family)
+    g = build(fam.default_instance)
+    fam2, bound2 = parse_spec(g.meta["spec"])
+    assert fam2.name == family
+    g2 = fam2.build(**bound2) if not fam2.variadic else \
+        fam2.build(*bound2[fam2.params[0][0]])
+    assert g2.n == g.n and g2.m == g.m
+
+
+def test_spec_parser_kwargs_and_positional():
+    assert build("torus(6,2)").n == 36
+    assert build("torus(k=6,d=2)").n == 36
+    assert build("torus(6,d=2)").n == 36
+    assert build("petersen").n == 10
+
+
+def test_spec_parser_errors():
+    with pytest.raises(SpecError, match="did you mean"):
+        build("slimfily(5)")
+    with pytest.raises(SpecError, match="no parameter"):
+        build("torus(k=6,z=2)")
+    with pytest.raises(SpecError, match="missing required"):
+        build("torus(6)")
+    with pytest.raises(SpecError, match="given twice"):
+        build("torus(6,k=6)")
+    with pytest.raises(SpecError, match="expected int"):
+        build("torus(6.5,2)")
+    with pytest.raises(SpecError):
+        build("torus(6,2,3)")
+    with pytest.raises(SpecError):
+        build("")
+
+
+def test_registry_defaults():
+    g = build("fat_tree(3)")          # base_mult defaults to 1
+    assert g.n == 15
+    g2 = build("fat_tree(3,base_mult=2)")
+    assert g2.m == 2 * g.m
+
+
+def test_deprecated_alias_peterson_torus():
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        g = build("peterson_torus(5,4)")
+    assert any(issubclass(x.category, DeprecationWarning) for x in w)
+    assert g.meta["family"] == "petersen_torus"
+    assert g.n == 200
+
+    import repro.core.topologies as T
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        g2 = T.peterson_torus(5, 4)
+    assert any(issubclass(x.category, DeprecationWarning) for x in w)
+    assert g2.n == 200 and g2.name == "petersen_torus(5,4)"
+
+
+def test_aliases_resolve():
+    assert get("jellyfish").name == "random_regular"
+    assert get("cube_connected_cycles").name == "ccc"
+    assert get("generalized_grid").name == "grid"
+    assert get("ramanujan").name == "lps"
+
+
+def test_registry_absorbs_table1():
+    """Registered closed forms agree with the legacy bounds.TABLE1 view."""
+    cases = [
+        ("butterfly", dict(k=3, s=4)),
+        ("ccc", dict(d=4)),
+        ("clex", dict(k=3, ell=3)),
+        ("data_vortex", dict(A=5, C=4)),
+        ("hypercube", dict(d=6)),
+        ("petersen_torus", dict(a=5, b=4)),
+        ("slimfly", dict(q=5)),
+        ("torus", dict(k=6, d=2)),
+    ]
+    for name, params in cases:
+        reg = closed_forms(name, **params)
+        legacy = B.TABLE1[name](**params)
+        for key, val in legacy.items():
+            assert reg[key] == pytest.approx(val), (name, key)
+
+
+def test_table1_peterson_key_kept_for_compat():
+    assert B.TABLE1["peterson_torus"] is B.TABLE1["petersen_torus"]
+
+
+def test_variadic_grid():
+    g = build("grid(3,4,2)")
+    assert g.n == 24
+    cf = closed_forms("grid", 3, 4, 2)
+    assert cf["nodes"] == 24
+    assert cf["rho2_ub"] == pytest.approx(2 * (1 - np.cos(np.pi / 4)))
+
+
+def test_dragonfly_nested_spec():
+    g = build("dragonfly(h='complete(6)')")
+    assert g.n == 42 and g.radix == 6
+    cf = closed_forms("dragonfly", h="complete(6)")
+    assert cf["nodes"] == 42
+    # generic H (non-complete): still get Corollary 2's rho2_ub
+    cf2 = closed_forms("dragonfly", h="cycle(6)")
+    assert cf2["nodes"] == 42
+    assert cf2["rho2_ub"] == pytest.approx(1.0 + 6 / 12.0)
+
+
+def test_build_stamps_meta():
+    g = build("torus(6,2)")
+    assert g.meta["family"] == "torus"
+    assert g.meta["spec"] == "torus(6,2)"
+    assert g.meta["vertex_transitive"] is True
