@@ -1,0 +1,30 @@
+"""Machine-speed calibration for the bench-regression gate.
+
+Absolute wall-clock baselines committed from one machine flake on another
+(different runner class, cold JIT cache, concurrent load).  Each BENCH
+payload therefore records ``calibration_seconds`` — the median time of a
+fixed dense eigendecomposition measured in the same process right before the
+benchmark — and ``check_regression.py`` gates on the *calibration-normalized*
+ratio whenever both sides carry the field.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+_N = 768
+_REPS = 3
+
+
+def measure_calibration() -> float:
+    """Median seconds of ``eigvalsh`` on a fixed symmetric 768x768 matrix."""
+    rng = np.random.default_rng(0)
+    a = rng.normal(size=(_N, _N))
+    a = (a + a.T) / 2.0
+    times = []
+    for _ in range(_REPS):
+        t0 = time.time()
+        np.linalg.eigvalsh(a)
+        times.append(time.time() - t0)
+    return float(np.median(times))

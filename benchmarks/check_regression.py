@@ -1,0 +1,128 @@
+"""CI bench-regression gate.
+
+Compares the freshly-emitted ``benchmarks/out/BENCH_survey.json`` and
+``BENCH_faults.json`` against the committed baselines in
+``benchmarks/baselines/`` and exits non-zero on
+
+* **wall-time regression** — any gated timing field more than ``--tolerance``
+  (default 20%, env ``BENCH_GATE_TOLERANCE``) above the baseline;
+* **correctness drift** — any gated correctness field differing from the
+  baseline at all (these are exact: bound checks, case counts, batching
+  invariants).
+
+Usage (what the CI bench-gate job runs)::
+
+    PYTHONPATH=src python -m benchmarks.run          # emits both BENCH files
+    python benchmarks/check_regression.py
+
+``--simulate-slowdown 1.25`` multiplies the current timings before comparing —
+the knob used to demonstrate that the gate actually fails on an injected
+regression.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import pathlib
+import sys
+
+#: per-bench gated fields: (correctness fields, timing fields).  Correctness
+#: paths use dotted access into the JSON payload.
+GATES = {
+    "BENCH_survey.json": dict(
+        correctness=["all_rho2_bounds_hold", "cases"],
+        timings=["total_seconds"],
+    ),
+    "BENCH_faults.json": dict(
+        correctness=["correctness.cases", "correctness.all_interlacing_hold",
+                     "correctness.one_batched_solve_per_rate", "families",
+                     "samples", "rates"],
+        timings=["total_seconds"],
+    ),
+}
+
+
+def _get(payload: dict, dotted: str):
+    cur = payload
+    for part in dotted.split("."):
+        if not isinstance(cur, dict) or part not in cur:
+            return None
+        cur = cur[part]
+    return cur
+
+
+def check(name: str, baseline: dict, current: dict, tolerance: float,
+          slowdown: float) -> list:
+    errors = []
+    gate = GATES[name]
+    for field in gate["correctness"]:
+        base, cur = _get(baseline, field), _get(current, field)
+        if base != cur:
+            errors.append(f"{name}: correctness drift in {field!r}: "
+                          f"baseline={base!r} current={cur!r}")
+    # Machine-speed normalization: when both payloads carry the calibration
+    # probe (benchmarks/calibrate.py), gate on seconds-per-calibration-unit so
+    # a slower/faster runner class doesn't produce phantom verdicts.
+    base_cal = baseline.get("calibration_seconds")
+    cur_cal = current.get("calibration_seconds")
+    normalized = bool(base_cal and cur_cal)
+    unit = "x-cal" if normalized else "s"
+    for field in gate["timings"]:
+        base, cur = _get(baseline, field), _get(current, field)
+        if base is None or cur is None:
+            errors.append(f"{name}: timing field {field!r} missing "
+                          f"(baseline={base!r} current={cur!r})")
+            continue
+        cur = cur * slowdown
+        if normalized:
+            base, cur = base / base_cal, cur / cur_cal
+        limit = base * (1.0 + tolerance)
+        verdict = "OK" if cur <= limit else "REGRESSION"
+        print(f"  {name}:{field}: baseline {base:.3f}{unit}, "
+              f"current {cur:.3f}{unit}, limit {limit:.3f}{unit} -> {verdict}")
+        if cur > limit:
+            errors.append(
+                f"{name}: wall-time regression in {field!r}: {cur:.3f}{unit} "
+                f"> {limit:.3f}{unit} (baseline {base:.3f}{unit} + "
+                f"{tolerance:.0%})")
+    return errors
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--baseline-dir", default="benchmarks/baselines")
+    ap.add_argument("--out-dir", default="benchmarks/out")
+    ap.add_argument("--tolerance", type=float,
+                    default=float(os.environ.get("BENCH_GATE_TOLERANCE", 0.20)),
+                    help="allowed fractional wall-time growth (default 0.20)")
+    ap.add_argument("--simulate-slowdown", type=float, default=1.0,
+                    help="multiply current timings (inject a fake regression "
+                         "to prove the gate fires)")
+    args = ap.parse_args(argv)
+    errors = []
+    for name in GATES:
+        base_p = pathlib.Path(args.baseline_dir) / name
+        cur_p = pathlib.Path(args.out_dir) / name
+        if not base_p.exists():
+            errors.append(f"missing committed baseline {base_p} "
+                          f"(regenerate and commit it)")
+            continue
+        if not cur_p.exists():
+            errors.append(f"missing current bench output {cur_p} "
+                          f"(run benchmarks/run.py first)")
+            continue
+        errors += check(name, json.loads(base_p.read_text()),
+                        json.loads(cur_p.read_text()),
+                        args.tolerance, args.simulate_slowdown)
+    if errors:
+        print("\nBENCH GATE FAILED:", file=sys.stderr)
+        for e in errors:
+            print(f"  - {e}", file=sys.stderr)
+        return 1
+    print("bench gate passed: no wall-time regression, no correctness drift")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

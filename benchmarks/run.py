@@ -22,9 +22,12 @@ def _timed(name, fn, derive):
 
 def _emit_survey_bench(rows, total_us,
                        out_json: str = "benchmarks/out/BENCH_survey.json") -> None:
+    from .calibrate import measure_calibration
+
     payload = dict(
         bench="table1_survey",
         total_seconds=round(total_us / 1e6, 3),
+        calibration_seconds=round(measure_calibration(), 4),
         cases=len(rows),
         all_rho2_bounds_hold=all(r["rho2_ok"] for r in rows),
         per_row=[dict(spec=r.get("instance"), nodes=r.get("nodes"),
@@ -36,12 +39,16 @@ def _emit_survey_bench(rows, total_us,
 
 
 def main() -> None:
-    from . import collective_model, fig5, lps_bench, roofline, table1
+    from . import collective_model, fault_sweep, fig5, lps_bench, roofline, \
+        table1
 
     t0 = time.time()
     rows = _timed("table1_rho2_bw_bounds", table1.run,
                   lambda rows: f"all_rho2_bounds_hold={all(r['rho2_ok'] for r in rows)}")
     _emit_survey_bench(rows, (time.time() - t0) * 1e6)
+    _timed("fault_sweep_resilience", fault_sweep.run,
+           lambda rows: "min_retention_at_10pct=%.2f"
+           % min(r["retention_at_010"] or 0.0 for r in rows))
     _timed("fig5_proportional_bw", fig5.run,
            lambda rows: f"curve_points={len(rows)}")
     _timed("lps_ramanujan_cert", lps_bench.run,

@@ -3,8 +3,13 @@ for any registered topology, addressed by spec string.
 
     PYTHONPATH=src python examples/topology_report.py "slimfly(q=13)"
     PYTHONPATH=src python examples/topology_report.py "lps(13,17)"
-    PYTHONPATH=src python examples/topology_report.py "torus(16,2)"
+    PYTHONPATH=src python examples/topology_report.py "torus(16,2)" --fault-rate 0.05
     PYTHONPATH=src python examples/topology_report.py --list
+
+``--fault-rate`` appends the resilience block: survival statistics (rho2,
+guaranteed bisection floor, connectivity) under the chosen fault model,
+solved through the batched degraded-Lanczos sweep (see README "Fault
+tolerance & degraded operation").
 
 There is no per-topology dispatch here: the registry parses the spec, builds
 the instance, and the lazy Analysis session computes (and backend-selects)
@@ -33,6 +38,11 @@ def main():
     ap.add_argument("--dense-threshold", type=int, default=4096,
                     help="largest n using the dense float64 oracle")
     ap.add_argument("--lanczos-iters", type=int, default=200)
+    ap.add_argument("--fault-rate", type=float, default=None,
+                    help="append a resilience block at this fault rate")
+    ap.add_argument("--fault-model", default="link",
+                    choices=["link", "node", "attack_degree", "attack_spectral"])
+    ap.add_argument("--fault-samples", type=int, default=32)
     args = ap.parse_args()
     if args.list or not args.spec:
         print(list_families())
@@ -42,6 +52,10 @@ def main():
     a = Analysis(args.spec, dense_threshold=args.dense_threshold,
                  lanczos_iters=args.lanczos_iters)
     print(a.report())
+    if args.fault_rate is not None:
+        print("--- resilience (degraded operation) ---")
+        print(a.fault_sweep(rates=(args.fault_rate,), model=args.fault_model,
+                            samples=args.fault_samples).report())
 
 
 if __name__ == "__main__":

@@ -17,11 +17,12 @@ so ``survey()`` can pre-populate (e.g. batched rho2 solves) without waste.
 from __future__ import annotations
 
 from functools import cached_property
-from typing import Any, Dict, Optional, Union
+from typing import Any, Dict, Optional, Sequence, Union
 
 import numpy as np
 
 from repro.core import bounds as B
+from repro.core import faults as F
 from repro.core import properties as P
 from repro.core import spectral as S
 from repro.core.graphs import Topology
@@ -215,6 +216,24 @@ class Analysis:
             lam=lam,
             is_ramanujan=bool(lam <= bound + 1e-6),
         )
+
+    # -- degraded operation (fault tolerance, §3) --------------------------
+    def fault_sweep(self, rates: Sequence[float] = (0.02, 0.05, 0.1, 0.2),
+                    model: str = "link", samples: int = 32,
+                    seed: Optional[int] = None,
+                    iters: Optional[int] = None) -> "F.FaultSweepResult":
+        """Survival curves under fault injection (rho2, bisection floor,
+        connectivity vs fault rate).  Monte-Carlo models batch all ``samples``
+        degraded instances per rate into ONE vmapped Laplacian Lanczos solve;
+        the adversarial models (``attack_degree``, ``attack_spectral``) are
+        deterministic.  Reuses this session's cached healthy rho2 and (for the
+        spectral attack) Fiedler vector."""
+        fiedler = self.fiedler if model == "attack_spectral" else None
+        return F.fault_sweep(
+            self.topo, rates=rates, model=model, samples=samples,
+            seed=self.seed if seed is None else int(seed),
+            iters=min(iters or self.lanczos_iters, max(self.n - 1, 8)),
+            rho2_healthy=self.rho2, fiedler=fiedler)
 
     # -- presentation ------------------------------------------------------
     def report(self) -> str:

@@ -24,11 +24,19 @@ from .analysis import Analysis
 from .registry import REGISTRY
 
 __all__ = ["survey", "SurveyResult", "COLUMNS", "DEFAULT_COLUMNS",
-           "TABLE1_COLUMNS", "RAMANUJAN_COLUMNS"]
+           "TABLE1_COLUMNS", "RAMANUJAN_COLUMNS", "FAULT_COLUMNS"]
 
 
 def _round(x: float, nd: int = 6) -> float:
     return round(float(x), nd)
+
+
+def csv_field(v) -> str:
+    """One CSV cell, quoted/escaped when needed (shared by every CSV writer)."""
+    s = "" if v is None else str(v)
+    if any(ch in s for ch in ',"\n'):
+        s = '"' + s.replace('"', '""') + '"'
+    return s
 
 
 def _forms_value(a: Analysis, key: str) -> Any:
@@ -83,6 +91,12 @@ RAMANUJAN_COLUMNS = [
     "seconds",
 ]
 
+#: resilience columns appended automatically when ``survey(faults=...)``
+FAULT_COLUMNS = [
+    "fault_model", "fault_rate", "rho2_degraded", "rho2_retention",
+    "connectivity_prob", "bw_fiedler_lb_degraded",
+]
+
 
 def _closed_form_ok(a: Analysis, tol: float = 1e-6) -> Optional[bool]:
     """Measured rho2 against the registered closed form (None if no form)."""
@@ -113,15 +127,9 @@ class SurveyResult:
         return len(self.rows)
 
     def to_csv(self, path: Optional[str] = None) -> str:
-        def field(v) -> str:
-            s = "" if v is None else str(v)
-            if any(ch in s for ch in ',"\n'):
-                s = '"' + s.replace('"', '""') + '"'
-            return s
-
         text = "\n".join(
             [",".join(self.columns)]
-            + [",".join(field(r.get(c)) for c in self.columns)
+            + [",".join(csv_field(r.get(c)) for c in self.columns)
                for r in self.rows])
         if path is not None:
             p = pathlib.Path(path)
@@ -189,12 +197,39 @@ def _batch_lanczos_rho2(analyses: Sequence[Analysis]) -> Dict[int, float]:
     return shares
 
 
+def _fault_config(faults: Union[float, Dict[str, Any]]) -> Dict[str, Any]:
+    cfg = dict(rate=float(faults)) if isinstance(faults, (int, float)) \
+        else dict(faults)
+    cfg.setdefault("rate", 0.05)
+    cfg.setdefault("model", "link")
+    cfg.setdefault("samples", 16)
+    return cfg
+
+
+def _fault_values(a: Analysis, cfg: Dict[str, Any]) -> Dict[str, Any]:
+    """One-rate fault sweep for a survey row → the FAULT_COLUMNS values."""
+    sweep = a.fault_sweep(rates=[cfg["rate"]], model=cfg["model"],
+                          samples=cfg["samples"], seed=cfg.get("seed"))
+    r = sweep.rows[0]
+    return dict(
+        fault_model=cfg["model"],
+        fault_rate=cfg["rate"],
+        rho2_degraded=_round(r["rho2_mean"]),
+        rho2_retention=None if r["rho2_retention"] is None
+            else _round(r["rho2_retention"], 4),
+        connectivity_prob=r["connectivity_prob"],
+        bw_fiedler_lb_degraded=_round(r["bw_fiedler_lb_mean"], 2),
+    )
+
+
 def survey(specs: Sequence[Union[str, Topology, Analysis]],
            columns: Optional[Sequence[str]] = None, *,
            dense_threshold: int = S.DENSE_THRESHOLD,
            lanczos_iters: int = 200, seed: int = 0,
            batch_lanczos: bool = True,
-           use_pallas_kernel: bool = False) -> SurveyResult:
+           use_pallas_kernel: bool = False,
+           faults: Optional[Union[float, Dict[str, Any]]] = None
+           ) -> SurveyResult:
     """Uniform spectral survey over many topologies (the paper's Table 1).
 
     ``specs``: spec strings (``"slimfly(q=13)"``), Topology instances, or
@@ -203,12 +238,23 @@ def survey(specs: Sequence[Union[str, Topology, Analysis]],
     :data:`DEFAULT_COLUMNS`.  Instances with ``n > dense_threshold`` route
     through the JAX Lanczos path automatically; same-shape groups share one
     batched solve.
+
+    ``faults``: a fault rate (``faults=0.05``) or config dict
+    (``faults=dict(rate=0.1, model="attack_spectral", samples=32)``) runs a
+    per-instance fault sweep at that rate and appends the resilience columns
+    of :data:`FAULT_COLUMNS` to every row.
     """
     cols = list(columns if columns is not None else DEFAULT_COLUMNS)
-    unknown = [c for c in cols if c != "seconds" and c not in COLUMNS]
+    fault_cfg = None
+    extra = {"seconds"}
+    if faults is not None:
+        fault_cfg = _fault_config(faults)
+        cols += [c for c in FAULT_COLUMNS if c not in cols]
+        extra |= set(FAULT_COLUMNS)    # only meaningful with faults=...
+    unknown = [c for c in cols if c not in extra and c not in COLUMNS]
     if unknown:
         raise KeyError(f"unknown survey column(s) {unknown}; available: "
-                       f"{sorted(COLUMNS)} + ['seconds']")
+                       f"{sorted(COLUMNS)} + {sorted(extra)}")
     analyses, build_secs = [], []
     for s in specs:
         t0 = time.time()
@@ -222,7 +268,10 @@ def survey(specs: Sequence[Union[str, Topology, Analysis]],
     rows = []
     for a, built in zip(analyses, build_secs):
         t0 = time.time()
-        row = {c: COLUMNS[c](a) for c in cols if c != "seconds"}
+        row = {c: COLUMNS[c](a) for c in cols
+               if c != "seconds" and c in COLUMNS}
+        if fault_cfg is not None:
+            row.update(_fault_values(a, fault_cfg))
         if "seconds" in cols:
             # construction + (amortized) batched solve + lazy evaluation, so
             # the column means what the pre-registry benchmark reported

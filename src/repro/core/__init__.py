@@ -1,9 +1,10 @@
 """repro.core — the paper's contribution: interconnect topologies, their
 spectra, the Reduction Lemma, Ramanujan (LPS) constructions, and the
 topology-aware collective cost model."""
-from . import bounds, collectives, graphs, lifts, placement, properties, \
-    ramanujan, reduction, spectral, topologies
+from . import bounds, collectives, faults, graphs, lifts, placement, \
+    properties, ramanujan, reduction, spectral, topologies
 from .graphs import Topology
 
-__all__ = ["Topology", "bounds", "collectives", "graphs", "lifts", "placement",
-           "properties", "ramanujan", "reduction", "spectral", "topologies"]
+__all__ = ["Topology", "bounds", "collectives", "faults", "graphs", "lifts",
+           "placement", "properties", "ramanujan", "reduction", "spectral",
+           "topologies"]

@@ -16,7 +16,9 @@ __all__ = [
     "alon_milman_diameter_ub", "mohar_diameter_lb", "fiedler_bw_lb",
     "cheeger_bw_ub", "first_moment_bw_ub", "fiedler_vertex_connectivity_lb",
     "tanner_isoperimetric_lb", "alon_milman_gap_lb", "discrepancy_edge_bound",
-    "active_subset_bw_lb", "ramanujan_rho2", "ramanujan_bw_lb", "TABLE1",
+    "active_subset_bw_lb", "ramanujan_rho2", "ramanujan_bw_lb",
+    "interlacing_degraded_rho2_ub", "weyl_degraded_rho2_lb",
+    "expected_degraded_rho2", "TABLE1",
 ]
 
 
@@ -88,6 +90,32 @@ def active_subset_bw_lb(alpha: float, n: int, k: float) -> float:
     Ramanujan topology (§3):  (alpha k n / 2) (alpha/2 - (2 sqrt(k-1)/k)(1 - alpha/2)).
     """
     return (alpha * k * n / 2.0) * (alpha / 2.0 - (2.0 * math.sqrt(k - 1.0) / k) * (1.0 - alpha / 2.0))
+
+
+# --------------------------------------------------------------------------
+# degraded operation: analytic bounds on rho_2 after link faults
+# --------------------------------------------------------------------------
+
+def interlacing_degraded_rho2_ub(rho2_healthy: float) -> float:
+    """Removing links never raises rho_2: L(G - F) ⪯ L(G) in the Loewner
+    order (each removed edge subtracts a PSD rank-1 term), so by eigenvalue
+    monotonicity every sampled degraded gap sits at or below the healthy one.
+    Valid for link faults; node faults change the vertex set and can RAISE
+    rho_2 (e.g. pruning a pendant path), so no such cap applies there."""
+    return rho2_healthy
+
+
+def weyl_degraded_rho2_lb(rho2_healthy: float, links_removed: int) -> float:
+    """Weyl: each removed edge's Laplacian has spectral norm 2, so
+    rho_2(G - F) >= rho_2(G) - 2 |F| (clipped at 0).  Loose but certified."""
+    return max(0.0, rho2_healthy - 2.0 * links_removed)
+
+
+def expected_degraded_rho2(rho2_healthy: float, fault_rate: float) -> float:
+    """E[L_degraded] = (1 - r) L under iid link failure at rate r, so the
+    first-order expected gap is (1 - r) rho_2 — the scaling the collective
+    cost model's ``degrade`` view uses for its guaranteed-bisection figure."""
+    return rho2_healthy * (1.0 - fault_rate)
 
 
 # --------------------------------------------------------------------------

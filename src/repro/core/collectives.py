@@ -25,7 +25,7 @@ import dataclasses
 import math
 from typing import Optional
 
-from .bounds import fiedler_bw_lb, ramanujan_rho2
+from .bounds import expected_degraded_rho2, fiedler_bw_lb, ramanujan_rho2
 from .graphs import Topology
 
 __all__ = ["NetworkModel", "network_from_topology", "tpu_v5e_ici",
@@ -41,17 +41,65 @@ class NetworkModel:
     """Abstract interconnect: everything the cost model needs."""
     name: str
     n: int                  # nodes (chips)
-    radix: int              # links per node
+    radix: int              # links per node (as built)
     bisection_links: float  # links crossing the worst balanced cut (guaranteed)
     diameter: int
     link_bw: float = LINK_BW
     hop_latency: float = PER_HOP_LATENCY
+    rho2: Optional[float] = None          # algebraic connectivity, if known
+    effective_radix: Optional[float] = None  # surviving links/node (degraded)
+    fault_rate: float = 0.0               # cumulative fraction already failed
 
     # ---- collective times (payload = bytes per node) ----------------------
     def _bw_time(self, inj_bytes: float, cross_bytes: float) -> float:
-        t_inj = inj_bytes / (self.radix * self.link_bw)
+        inj_links = self.effective_radix if self.effective_radix is not None \
+            else self.radix
+        t_inj = inj_bytes / (inj_links * self.link_bw)
         t_cut = cross_bytes / (self.bisection_links * self.link_bw)
         return max(t_inj, t_cut)
+
+    # ---- degraded operation ----------------------------------------------
+    def degrade(self, fault_rate: float, model: str = "link") -> "NetworkModel":
+        """View of this network after ``fault_rate`` of its links ("link") or
+        routers ("node") have failed — collective predictions then reflect the
+        guaranteed degraded bisection.
+
+        Under iid link failure E[L_degraded] = (1 - r) L, so the certified
+        figure is the Fiedler floor at the expected degraded gap
+        rho2 * (1 - r) — equivalently the healthy bisection scaled by (1 - r)
+        (node failure kills a cut link when either endpoint dies: (1 - r)^2).
+        Injection capacity degrades to ``effective_radix = radix * (1 - r)``
+        and, when rho2 is known, the diameter is bumped to the Theorem-1
+        (Alon–Milman) upper bound at the degraded gap.  ``degrade(0.0)`` is an
+        exact no-op (returns ``self``); successive calls compose.
+        """
+        if not 0.0 <= fault_rate < 1.0:
+            raise ValueError(f"fault rate must be in [0, 1), got {fault_rate}")
+        if model not in ("link", "node"):
+            raise ValueError(f"degrade model must be 'link' or 'node', "
+                             f"got {model!r}")
+        if fault_rate == 0.0:
+            return self
+        s = 1.0 - fault_rate
+        n = self.n if model == "link" else max(int(round(self.n * s)), 2)
+        cut_survival = s if model == "link" else s * s
+        rho2_deg = None if self.rho2 is None \
+            else expected_degraded_rho2(self.rho2, fault_rate)
+        diameter = self.diameter
+        if rho2_deg is not None and rho2_deg > 0:
+            from .bounds import alon_milman_diameter_ub
+            kmax = self.effective_radix if self.effective_radix is not None \
+                else self.radix
+            diameter = max(self.diameter,
+                           int(alon_milman_diameter_ub(n, kmax, rho2_deg)))
+        inj = self.effective_radix if self.effective_radix is not None \
+            else float(self.radix)
+        return dataclasses.replace(
+            self, name=f"{self.name}!{model}@{fault_rate:g}", n=n,
+            bisection_links=max(self.bisection_links * cut_survival, 1e-9),
+            diameter=diameter, rho2=rho2_deg,
+            effective_radix=inj * s,
+            fault_rate=1.0 - (1.0 - self.fault_rate) * s)
 
     def _lat(self, steps: float) -> float:
         return steps * self.hop_latency
@@ -111,7 +159,8 @@ def network_from_topology(topo: Topology, diameter: Optional[int] = None,
     bisection = exact_bisection if exact_bisection is not None \
         else fiedler_bw_lb(topo.n, rho2)
     return NetworkModel(name=topo.name, n=topo.n, radix=topo.radix,
-                        bisection_links=max(bisection, 1e-9), diameter=diameter)
+                        bisection_links=max(bisection, 1e-9), diameter=diameter,
+                        rho2=rho2)
 
 
 def tpu_v5e_ici(x: int = 16, y: int = 16) -> NetworkModel:
@@ -124,7 +173,7 @@ def tpu_v5e_ici(x: int = 16, y: int = 16) -> NetworkModel:
     rho2 = 2.0 * (1 - math.cos(2 * math.pi / max(x, y)))
     return NetworkModel(name=f"torus({x}x{y})", n=n, radix=4,
                         bisection_links=2.0 * min(x, y),
-                        diameter=x // 2 + y // 2)
+                        diameter=x // 2 + y // 2, rho2=rho2)
 
 
 # traffic factors used by the roofline report (documents the model above)

@@ -24,7 +24,7 @@ __all__ = [
     "algebraic_connectivity", "spectral_gap", "lambda_nontrivial",
     "fiedler_vector", "table_matvec", "lanczos_tridiag", "lanczos_extremes",
     "lanczos_top_ritz", "rho2_lanczos", "rho2_lanczos_batched",
-    "fiedler_lanczos", "DENSE_THRESHOLD",
+    "rho2_laplacian_batched", "fiedler_lanczos", "DENSE_THRESHOLD",
 ]
 
 #: graphs at or below this order use the dense float64 oracle; larger ones go
@@ -293,6 +293,84 @@ def _lanczos_tridiag_batched(tables: jnp.ndarray, weights: jnp.ndarray,
         return alphas, betas
 
     return jax.vmap(run)(tables, weights, v0s)
+
+
+def _truncate_at_breakdown(alphas: np.ndarray, betas: np.ndarray
+                           ) -> Tuple[np.ndarray, np.ndarray]:
+    """Cut (alpha, beta) at the first Lanczos breakdown (beta zeroed by the
+    scan).  Steps past a breakdown contribute spurious zero rows to T, which
+    are harmless when reading the *largest* Ritz value but poison the
+    *smallest* one (the quantity the Laplacian path reports)."""
+    zero = np.nonzero(betas == 0.0)[0]
+    if zero.size:
+        keep = int(zero[0]) + 1
+        return alphas[:keep], betas[:max(keep - 1, 0)]
+    return alphas, betas[:-1]
+
+
+@functools.partial(jax.jit, static_argnames=("m",))
+def _lap_lanczos_batched(tables: jnp.ndarray, weights: jnp.ndarray,
+                         degs: jnp.ndarray, v0s: jnp.ndarray, m: int
+                         ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """vmapped ones-deflated *Laplacian* Lanczos over B same-shape tables.
+
+    The adjacency batch (:func:`_lanczos_tridiag_batched`) needs regular
+    graphs; this one applies L = D - A through the padded gather form, so it
+    is valid for the irregular graphs produced by fault injection.  ``degs``
+    holds per-vertex degrees *including* signed self-loop weights, which makes
+    ``deg * x - (gather + w * x)`` exactly L x (loops cancel).
+
+    Deflation of the trivial 0 eigenpair (ones) is done by a rank-one SHIFT,
+    not a projection: ``L + c * ones ones^T / n`` moves the ones eigenvalue to
+    ``c = max_deg + 2 > rho2`` (Fiedler: rho2 <= vertex connectivity <=
+    min degree, and rho2 = n = max_deg + 1 for K_n) and leaves every
+    ones-orthogonal eigenpair untouched.  A projection would let float32
+    roundoff reintroduce the ones component, whose ghost 0 Ritz value poisons
+    the *smallest* eigenvalue — exactly the one this path reports.
+    """
+    def run(tab, lw, deg, v0):
+        c = jnp.max(deg) + 2.0
+
+        def op(x):
+            lx = deg * x - (jnp.sum(x[tab], axis=1) + lw * x)
+            return lx + c * jnp.mean(x)
+
+        alphas, betas, _ = _lanczos_scan(op, v0, m)
+        return alphas, betas
+
+    return jax.vmap(run)(tables, weights, degs, v0s)
+
+
+def rho2_laplacian_batched(tables: np.ndarray, weights: np.ndarray,
+                           degs: np.ndarray, iters: int = 160,
+                           seed: int = 0) -> np.ndarray:
+    """rho_2 for B (possibly irregular) graphs in ONE vmapped Lanczos solve.
+
+    Operands are stacked padded gather forms — ``tables`` (B, n, k) int32,
+    ``weights`` (B, n) per-vertex self weights (loop + padding compensation),
+    ``degs`` (B, n) degrees including loop weights — exactly what
+    :func:`repro.core.faults.stacked_operands` builds for a batch of fault
+    samples.  Returns the second-smallest Laplacian eigenvalue per graph
+    (~0 for disconnected samples: the extra kernel vector survives the ones
+    deflation).  This is the fault-sweep engine: B degraded instances never
+    cost B Python-level solves.
+    """
+    tables = np.asarray(tables)
+    B, n, _ = tables.shape
+    key = jax.random.PRNGKey(seed)
+    v0s = jax.random.normal(key, (B, n), dtype=jnp.float32)
+    alphas, betas = _lap_lanczos_batched(
+        jnp.asarray(tables, dtype=jnp.int32),
+        jnp.asarray(weights, dtype=jnp.float32),
+        jnp.asarray(degs, dtype=jnp.float32), v0s, iters)
+    alphas = np.asarray(alphas, dtype=np.float64)
+    betas = np.asarray(betas, dtype=np.float64)
+    out = np.empty(B, dtype=np.float64)
+    for i in range(B):
+        a_i, b_i = _truncate_at_breakdown(alphas[i], betas[i])
+        ev = _tridiag_eigvals(a_i, b_i)
+        out[i] = max(float(ev[0]), 0.0)
+    return out
 
 
 def rho2_lanczos_batched(topos: Sequence[Topology], iters: int = 200,

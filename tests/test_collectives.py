@@ -44,6 +44,48 @@ def test_allreduce_injection_floor():
     assert abs(net.all_reduce(b) - expect) / expect < 0.01
 
 
+def test_degrade_zero_is_exact_noop():
+    net = tpu_v5e_ici(16, 16)
+    assert net.degrade(0.0) is net
+    assert net.degrade(0.0).all_reduce(1 << 30) == net.all_reduce(1 << 30)
+
+
+@pytest.mark.parametrize("model", ["link", "node"])
+def test_degrade_collective_times_monotone_in_fault_rate(model):
+    net = network_from_topology(T.torus(16, 2), vertex_transitive=True)
+    rates = [0.0, 0.02, 0.05, 0.1, 0.2, 0.4]
+    b = 1 << 24
+    for kind in ("all-reduce", "all-gather", "all-to-all"):
+        times = [net.degrade(r, model=model).collective_time(kind, b)
+                 for r in rates]
+        assert all(t1 <= t2 + 1e-15 for t1, t2 in zip(times, times[1:])), \
+            (kind, model, times)
+
+
+def test_degrade_reflects_guaranteed_bisection_and_injection():
+    net = tpu_v5e_ici(16, 16)
+    d = net.degrade(0.25, model="link")
+    assert d.bisection_links == pytest.approx(0.75 * net.bisection_links)
+    assert d.effective_radix == pytest.approx(0.75 * net.radix)
+    assert d.rho2 == pytest.approx(0.75 * net.rho2)
+    assert d.n == net.n and d.diameter >= net.diameter
+    # node faults: a cut link dies when either endpoint dies
+    dn = net.degrade(0.25, model="node")
+    assert dn.bisection_links == pytest.approx(0.75 ** 2 * net.bisection_links)
+    assert dn.n == round(0.75 * net.n)
+
+
+def test_degrade_composes_and_validates():
+    net = tpu_v5e_ici()
+    twice = net.degrade(0.1).degrade(0.1)
+    assert twice.fault_rate == pytest.approx(1 - 0.9 * 0.9)
+    assert twice.effective_radix == pytest.approx(net.radix * 0.81)
+    with pytest.raises(ValueError):
+        net.degrade(1.5)
+    with pytest.raises(ValueError):
+        net.degrade(0.1, model="gremlins")
+
+
 def test_placement_guarantee_vs_torus_empirical():
     """Discrepancy floor (Ramanujan) vs measured worst-case subset cut (torus)."""
     g = lps(13, 17)              # n=1092, k=18

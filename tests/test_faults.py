@@ -1,0 +1,192 @@
+"""Fault models + batched degraded-spectral sweeps (repro.core.faults)."""
+import numpy as np
+import pytest
+
+from repro.api import Analysis, survey
+from repro.core import faults as F
+from repro.core import spectral as S
+from repro.core import topologies as T
+
+
+# --------------------------------------------------------------------------
+# fault models
+# --------------------------------------------------------------------------
+
+def test_random_link_faults_seed_deterministic():
+    g = T.torus(8, 2)
+    a = F.random_link_faults(g, 0.1, seed=7)
+    b = F.random_link_faults(g, 0.1, seed=7)
+    c = F.random_link_faults(g, 0.1, seed=8)
+    assert np.array_equal(a.failed_links, b.failed_links)
+    assert not np.array_equal(a.failed_links, c.failed_links)
+    assert a.n_failed_links == round(0.1 * g.m)
+
+
+def test_random_node_faults_include_incident_links():
+    g = T.hypercube(5)
+    sc = F.random_node_faults(g, 0.2, seed=1)
+    assert sc.n_failed_nodes == round(0.2 * g.n)
+    dead = set(sc.failed_nodes.tolist())
+    expect = {i for i, (u, v) in enumerate(g.edges)
+              if u in dead or v in dead}
+    assert set(sc.failed_links.tolist()) == expect
+
+
+def test_adversarial_degree_attack_removes_claimed_nodes():
+    """The degree adversary kills exactly the highest-degree routers, and the
+    degraded graph contains none of their links."""
+    g = T.fat_tree(3, 2)                      # genuinely irregular degrees
+    deg = g.degrees(include_loops=False)
+    sc = F.adversarial_degree_attack(g, 0.1)
+    f = sc.n_failed_nodes
+    assert f == round(0.1 * g.n)
+    # every failed node's degree >= every survivor's degree
+    alive = np.setdiff1d(np.arange(g.n), sc.failed_nodes)
+    assert deg[sc.failed_nodes].min() >= deg[alive].max() - 1e-9
+    d = F.apply_faults(g, sc)
+    assert d.n == g.n - f
+    # survivors' induced edge count matches the claimed removal exactly
+    dead = np.zeros(g.n, dtype=bool)
+    dead[sc.failed_nodes] = True
+    kept = (~dead[g.edges[:, 0]]) & (~dead[g.edges[:, 1]])
+    assert d.m == int(kept.sum()) == g.m - sc.n_failed_links
+
+
+def test_adversarial_spectral_attack_removes_top_fiedler_edges():
+    g = T.torus(8, 2)
+    f = S.fiedler_vector(g)
+    sc = F.adversarial_spectral_attack(g, 0.1, fiedler=f)
+    energy = (f[g.edges[:, 0]] - f[g.edges[:, 1]]) ** 2
+    t = sc.n_failed_links
+    assert t == round(0.1 * g.m)
+    # the claimed edge set carries at least as much Fiedler energy as any
+    # other t-subset (i.e. it is the top-t set, modulo ties)
+    claimed = np.sort(energy[sc.failed_links])
+    top = np.sort(energy)[-t:]
+    assert np.allclose(claimed, top)
+    d = F.apply_faults(g, sc)
+    assert d.m == g.m - t
+    # and it is spectrally more damaging than a random cut of the same size
+    rand = F.apply_faults(g, F.random_link_faults(g, 0.1, seed=0))
+    assert S.laplacian_spectrum(d)[1] <= S.laplacian_spectrum(rand)[1] + 1e-9
+
+
+def test_apply_faults_strips_healthy_only_meta():
+    from repro.api import build
+
+    g = build("torus(8,2)")                   # registry sets the tags
+    assert g.meta.get("vertex_transitive")
+    d = F.apply_faults(g, F.random_link_faults(g, 0.1, seed=0))
+    assert "vertex_transitive" not in d.meta and "spec" not in d.meta
+    assert d.meta["fault"]["kind"] == "link"
+
+
+# --------------------------------------------------------------------------
+# batched degraded solve vs dense oracle
+# --------------------------------------------------------------------------
+
+def test_stacked_operands_apply_exact_laplacian():
+    g = T.fat_tree(3, 2)                      # irregular + loop-free
+    scen = [F.random_link_faults(g, 0.15, seed=i) for i in range(4)]
+    degraded = [F.apply_faults(g, s) for s in scen]
+    tabs, ws, degs = F.stacked_operands(degraded)
+    rng = np.random.default_rng(0)
+    for i, d in enumerate(degraded):
+        x = rng.normal(size=d.n)
+        lx = degs[i] * x - (x[tabs[i]].sum(axis=1) + ws[i] * x)
+        assert np.abs(lx - d.laplacian() @ x).max() < 1e-9
+
+
+def test_batched_rho2_matches_dense_oracle():
+    g = T.torus(8, 2)
+    degraded = [F.apply_faults(g, F.random_link_faults(g, 0.12, seed=i))
+                for i in range(8)]
+    tabs, ws, degs = F.stacked_operands(degraded)
+    got = S.rho2_laplacian_batched(tabs, ws, degs, iters=120, seed=0)
+    want = np.array([S.laplacian_spectrum(d)[1] for d in degraded])
+    assert np.abs(got - want).max() < 1e-3
+
+
+def test_batched_rho2_flags_disconnection():
+    """A sample cut into two components must report rho2 ~ 0."""
+    g = T.cycle(32)
+    sc = F.FaultScenario(kind="link", rate=2 / 32, seed=0,
+                         failed_links=np.array([0, 16]),
+                         failed_nodes=np.empty(0, dtype=np.int64))
+    d = F.apply_faults(g, sc)
+    assert F.connected_component_count(d.n, d.edges) == 2
+    tabs, ws, degs = F.stacked_operands([d])
+    got = S.rho2_laplacian_batched(tabs, ws, degs, iters=64, seed=0)
+    assert got[0] < 1e-4
+
+
+def test_connected_component_count_matches_networkx():
+    import networkx as nx
+
+    g = T.torus(6, 2)
+    d = F.apply_faults(g, F.random_link_faults(g, 0.4, seed=5))
+    want = nx.number_connected_components(d.to_networkx())
+    assert F.connected_component_count(d.n, d.edges) == want
+
+
+# --------------------------------------------------------------------------
+# sweeps: determinism + analytic bounds
+# --------------------------------------------------------------------------
+
+def test_fault_sweep_seed_deterministic():
+    g = T.hypercube(6)
+    a = F.fault_sweep(g, rates=(0.05, 0.15), samples=8, seed=3, iters=80)
+    b = F.fault_sweep(g, rates=(0.05, 0.15), samples=8, seed=3, iters=80)
+    c = F.fault_sweep(g, rates=(0.05, 0.15), samples=8, seed=4, iters=80)
+    for ra, rb in zip(a.rows, b.rows):
+        assert ra["rho2_mean"] == rb["rho2_mean"]
+        assert ra["connectivity_prob"] == rb["connectivity_prob"]
+    assert any(ra["rho2_mean"] != rc["rho2_mean"]
+               for ra, rc in zip(a.rows, c.rows))
+
+
+def test_interlacing_bound_upper_bounds_sampled_gap():
+    """Link removal only subtracts PSD terms from L, so every sampled
+    degraded rho2 must sit at or below the healthy value."""
+    for g in (T.torus(8, 2), T.slimfly(5)):
+        sweep = F.fault_sweep(g, rates=(0.02, 0.1, 0.25), model="link",
+                              samples=16, seed=0, iters=100)
+        for row in sweep.rows:
+            assert row["interlacing_rho2_ub"] == pytest.approx(
+                sweep.rho2_healthy)
+            assert row["rho2_max"] <= row["interlacing_rho2_ub"] + 1e-3
+            assert row["rho2_min"] >= row["weyl_rho2_lb"] - 1e-3
+
+
+def test_fault_sweep_single_batched_solve_per_rate():
+    g = T.torus(8, 2)
+    sweep = F.fault_sweep(g, rates=(0.05, 0.1, 0.2), samples=32, seed=0,
+                          iters=60)
+    assert sweep.batched_solves == 3          # one vmapped call per rate
+    assert all(r["samples"] == 32 for r in sweep.rows)
+
+
+def test_fault_sweep_rejects_unknown_model():
+    with pytest.raises(ValueError, match="unknown fault model"):
+        F.fault_sweep(T.petersen(), model="meteor")
+
+
+# --------------------------------------------------------------------------
+# api surface
+# --------------------------------------------------------------------------
+
+def test_analysis_fault_sweep_uses_cached_healthy_rho2():
+    a = Analysis("torus(8,2)")
+    sweep = a.fault_sweep(rates=(0.1,), samples=4)
+    assert sweep.rho2_healthy == pytest.approx(a.rho2)
+    assert "rate" in sweep.rows[0] and "fault model" in sweep.report()
+
+
+def test_survey_faults_appends_resilience_columns():
+    res = survey(["torus(6,2)", "petersen"], faults=dict(rate=0.1, samples=4))
+    for col in ("fault_rate", "rho2_degraded", "rho2_retention",
+                "connectivity_prob", "bw_fiedler_lb_degraded"):
+        assert col in res.columns
+        assert all(col in r for r in res.rows)
+    assert all(r["fault_rate"] == 0.1 for r in res.rows)
+    assert all(r["rho2_degraded"] <= r["rho2"] + 1e-3 for r in res.rows)
