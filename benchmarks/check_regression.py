@@ -40,6 +40,12 @@ GATES = {
                      "samples", "rates"],
         timings=["total_seconds"],
     ),
+    "BENCH_routing.json": dict(
+        correctness=["correctness.cases",
+                     "correctness.all_diameters_match_closed_forms",
+                     "correctness.load_conservation_ok", "families"],
+        timings=["total_seconds"],
+    ),
 }
 
 

@@ -40,7 +40,7 @@ def _emit_survey_bench(rows, total_us,
 
 def main() -> None:
     from . import collective_model, fault_sweep, fig5, lps_bench, roofline, \
-        table1
+        routing_eval, table1
 
     t0 = time.time()
     rows = _timed("table1_rho2_bw_bounds", table1.run,
@@ -49,6 +49,9 @@ def main() -> None:
     _timed("fault_sweep_resilience", fault_sweep.run,
            lambda rows: "min_retention_at_10pct=%.2f"
            % min(r["retention_at_010"] or 0.0 for r in rows))
+    _timed("routing_eval_path_traffic", routing_eval.run,
+           lambda rows: "all_diameters_match=%s"
+           % all(r["diameter_ok"] is not False for r in rows))
     _timed("fig5_proportional_bw", fig5.run,
            lambda rows: f"curve_points={len(rows)}")
     _timed("lps_ramanujan_cert", lps_bench.run,

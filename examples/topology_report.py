@@ -4,12 +4,18 @@ for any registered topology, addressed by spec string.
     PYTHONPATH=src python examples/topology_report.py "slimfly(q=13)"
     PYTHONPATH=src python examples/topology_report.py "lps(13,17)"
     PYTHONPATH=src python examples/topology_report.py "torus(16,2)" --fault-rate 0.05
+    PYTHONPATH=src python examples/topology_report.py "torus(16,2)" --routing
     PYTHONPATH=src python examples/topology_report.py --list
 
 ``--fault-rate`` appends the resilience block: survival statistics (rho2,
 guaranteed bisection floor, connectivity) under the chosen fault model,
 solved through the batched degraded-Lanczos sweep (see README "Fault
 tolerance & degraded operation").
+
+``--routing`` appends the measured path structure (batched all-sources BFS:
+exact diameter, hop distribution, path diversity) and the ECMP link-load
+accounting of ``--traffic-pattern`` (max link load, saturation throughput) —
+see docs/api.md "Routing & traffic".
 
 There is no per-topology dispatch here: the registry parses the spec, builds
 the instance, and the lazy Analysis session computes (and backend-selects)
@@ -43,6 +49,11 @@ def main():
     ap.add_argument("--fault-model", default="link",
                     choices=["link", "node", "attack_degree", "attack_spectral"])
     ap.add_argument("--fault-samples", type=int, default=32)
+    ap.add_argument("--routing", action="store_true",
+                    help="append measured path structure + traffic loads")
+    ap.add_argument("--traffic-pattern", default="uniform",
+                    help="traffic pattern for --routing (uniform, "
+                         "bit_complement, transpose, neighbor, adversarial)")
     args = ap.parse_args()
     if args.list or not args.spec:
         print(list_families())
@@ -52,6 +63,10 @@ def main():
     a = Analysis(args.spec, dense_threshold=args.dense_threshold,
                  lanczos_iters=args.lanczos_iters)
     print(a.report())
+    if args.routing:
+        print("--- measured path structure (routing & traffic) ---")
+        print(a.routing().report())
+        print(a.traffic(args.traffic_pattern).report())
     if args.fault_rate is not None:
         print("--- resilience (degraded operation) ---")
         print(a.fault_sweep(rates=(args.fault_rate,), model=args.fault_model,

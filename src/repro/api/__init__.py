@@ -24,7 +24,7 @@ __all__ = [
     "Family", "REGISTRY", "SpecError", "TopologyRegistry", "build",
     "closed_forms", "families", "get", "parse_spec", "register",
     "Analysis", "survey", "SurveyResult", "DEFAULT_COLUMNS", "TABLE1_COLUMNS",
-    "FAULT_COLUMNS",
+    "FAULT_COLUMNS", "ROUTING_COLUMNS",
 ]
 
 _LAZY = {
@@ -36,6 +36,7 @@ _LAZY = {
     "TABLE1_COLUMNS": ("repro.api.survey", "TABLE1_COLUMNS"),
     "RAMANUJAN_COLUMNS": ("repro.api.survey", "RAMANUJAN_COLUMNS"),
     "FAULT_COLUMNS": ("repro.api.survey", "FAULT_COLUMNS"),
+    "ROUTING_COLUMNS": ("repro.api.survey", "ROUTING_COLUMNS"),
 }
 
 

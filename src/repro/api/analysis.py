@@ -24,7 +24,9 @@ import numpy as np
 from repro.core import bounds as B
 from repro.core import faults as F
 from repro.core import properties as P
+from repro.core import routing as R
 from repro.core import spectral as S
+from repro.core import traffic as TR
 from repro.core.graphs import Topology
 from repro.core.ramanujan import ramanujan_bound
 
@@ -51,18 +53,22 @@ class Analysis:
     # -- identity ----------------------------------------------------------
     @property
     def n(self) -> int:
+        """Number of vertices (routers/chips)."""
         return self.topo.n
 
     @property
     def name(self) -> str:
+        """Instance name, e.g. ``slimfly(13)``."""
         return self.topo.name
 
     @property
     def family(self) -> Optional[str]:
+        """Registry family name, or None for hand-built topologies."""
         return self.topo.meta.get("family")
 
     @property
     def spec(self) -> Optional[str]:
+        """Canonical spec string, or None for hand-built topologies."""
         return self.topo.meta.get("spec")
 
     @property
@@ -217,23 +223,65 @@ class Analysis:
             is_ramanujan=bool(lam <= bound + 1e-6),
         )
 
+    # -- measured path structure (routing & traffic) -----------------------
+    def routing(self, sources: Optional[Sequence[int]] = None
+                ) -> "R.RoutingResult":
+        """Measured path structure via batched all-sources BFS (lazy, cached).
+
+        Args:
+            sources: BFS source vertices; ``None`` (the cached default) runs
+                all n sources → exact diameter, hop-count distribution,
+                average shortest-path length, and per-pair minimal-path
+                counts.  A subset returns sampled statistics (not cached).
+
+        Returns:
+            :class:`repro.core.routing.RoutingResult` (units: hops).
+        """
+        if sources is not None:
+            return R.analyze_routing(self.topo, sources=sources)
+        if "_routing" not in self.__dict__:
+            self.__dict__["_routing"] = R.analyze_routing(self.topo)
+        return self.__dict__["_routing"]
+
+    def traffic(self, pattern: str = "uniform") -> "TR.TrafficResult":
+        """ECMP link-load accounting of one synthetic pattern (lazy, cached).
+
+        Routes the named demand pattern (see
+        :data:`repro.core.traffic.TRAFFIC_PATTERNS`) over all minimal paths
+        with equal splitting, reusing this session's cached :meth:`routing`
+        matrices and (for ``adversarial``) Fiedler vector.
+
+        Returns:
+            :class:`repro.core.traffic.TrafficResult` — per-directed-link
+            loads in injection units, max load, saturation throughput.
+        """
+        cache = self.__dict__.setdefault("_traffic", {})
+        if pattern not in cache:
+            fiedler = self.fiedler if pattern == "adversarial" else None
+            cache[pattern] = TR.evaluate_traffic(
+                self.topo, pattern, routing=self.routing(), fiedler=fiedler)
+        return cache[pattern]
+
     # -- degraded operation (fault tolerance, §3) --------------------------
     def fault_sweep(self, rates: Sequence[float] = (0.02, 0.05, 0.1, 0.2),
                     model: str = "link", samples: int = 32,
                     seed: Optional[int] = None,
-                    iters: Optional[int] = None) -> "F.FaultSweepResult":
+                    iters: Optional[int] = None,
+                    routing: bool = False) -> "F.FaultSweepResult":
         """Survival curves under fault injection (rho2, bisection floor,
         connectivity vs fault rate).  Monte-Carlo models batch all ``samples``
         degraded instances per rate into ONE vmapped Laplacian Lanczos solve;
         the adversarial models (``attack_degree``, ``attack_spectral``) are
         deterministic.  Reuses this session's cached healthy rho2 and (for the
-        spectral attack) Fiedler vector."""
+        spectral attack) Fiedler vector.  ``routing=True`` additionally runs
+        batched BFS over each rate's stacked degraded tables, appending
+        measured degraded diameter / path-length / reachability per rate."""
         fiedler = self.fiedler if model == "attack_spectral" else None
         return F.fault_sweep(
             self.topo, rates=rates, model=model, samples=samples,
             seed=self.seed if seed is None else int(seed),
             iters=min(iters or self.lanczos_iters, max(self.n - 1, 8)),
-            rho2_healthy=self.rho2, fiedler=fiedler)
+            rho2_healthy=self.rho2, fiedler=fiedler, routing=routing)
 
     # -- presentation ------------------------------------------------------
     def report(self) -> str:

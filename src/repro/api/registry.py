@@ -102,6 +102,8 @@ class Family:
         return bound
 
     def build(self, *args: Any, **kwargs: Any) -> "Topology":
+        """Construct an instance (schema-checked), stamping ``family``/
+        ``spec``/tag metadata onto the returned Topology."""
         bound = self.bind(args, kwargs)
         if self.variadic:
             topo = self.ctor(*bound[self.params[0][0]])
@@ -231,6 +233,7 @@ class TopologyRegistry:
         return fam, fam.bind(args, kwargs)
 
     def build(self, spec: str) -> "Topology":
+        """Parse a spec string and construct the instance it names."""
         fam, bound = self.parse(spec)
         if fam.variadic:
             return fam.build(*bound[fam.params[0][0]])
@@ -259,19 +262,39 @@ def register(name: str, **kwargs: Any) -> Callable:
 
 
 def get(name: str) -> Family:
+    """Look up a :class:`Family` by name or (deprecated) alias.
+
+    Args: ``name`` — family name (``"slimfly"``), alias, or deprecated alias
+    (which warns).  Returns the :class:`Family` record; raises
+    :class:`SpecError` with a did-you-mean hint for unknown names.
+    """
     return REGISTRY.get(name)
 
 
 def families() -> List[str]:
+    """Sorted canonical family names currently registered (no aliases)."""
     return REGISTRY.families()
 
 
 def build(spec: str) -> "Topology":
-    """Construct a topology from a spec string (or bare family name)."""
+    """Construct a topology from a spec string (or bare family name).
+
+    Args: ``spec`` — e.g. ``"slimfly(q=13)"``, ``"torus(16,2)"`` or
+    ``"petersen"``; values are Python literals, positional args bind in
+    schema order.  Returns the built :class:`~repro.core.graphs.Topology`
+    (with ``family``/``spec`` recorded in ``meta``); raises
+    :class:`SpecError` on unknown families or malformed parameters.
+    """
     return REGISTRY.build(spec)
 
 
 def parse_spec(spec: str) -> Tuple[Family, Dict[str, Any]]:
+    """Parse without building: ``"slimfly(q=13)"`` → (Family, bound params).
+
+    Returns the family record plus the fully-defaulted parameter dict —
+    what :func:`build` would construct with; raises :class:`SpecError` on
+    malformed specs.
+    """
     return REGISTRY.parse(spec)
 
 

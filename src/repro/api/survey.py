@@ -24,7 +24,8 @@ from .analysis import Analysis
 from .registry import REGISTRY
 
 __all__ = ["survey", "SurveyResult", "COLUMNS", "DEFAULT_COLUMNS",
-           "TABLE1_COLUMNS", "RAMANUJAN_COLUMNS", "FAULT_COLUMNS"]
+           "TABLE1_COLUMNS", "RAMANUJAN_COLUMNS", "FAULT_COLUMNS",
+           "ROUTING_COLUMNS"]
 
 
 def _round(x: float, nd: int = 6) -> float:
@@ -97,6 +98,17 @@ FAULT_COLUMNS = [
     "connectivity_prob", "bw_fiedler_lb_degraded",
 ]
 
+#: measured path-structure columns appended when ``survey(routing=...)``:
+#: exact BFS diameter (hops) + agreement with the registered closed form,
+#: average shortest-path length (hops), mean minimal-path count per pair,
+#: max directed link load (injection units) and saturation throughput under
+#: the configured traffic pattern, and the spectral throughput prediction.
+ROUTING_COLUMNS = [
+    "diameter_bfs", "diameter_ok", "avg_hops", "path_diversity",
+    "traffic_pattern", "max_link_load", "saturation_throughput",
+    "throughput_spectral",
+]
+
 
 def _closed_form_ok(a: Analysis, tol: float = 1e-6) -> Optional[bool]:
     """Measured rho2 against the registered closed form (None if no form)."""
@@ -116,7 +128,13 @@ def _closed_form_ok(a: Analysis, tol: float = 1e-6) -> Optional[bool]:
 
 @dataclasses.dataclass
 class SurveyResult:
-    """Rows + column order, with CSV/JSON emitters."""
+    """Rows + column order, with CSV/JSON emitters.
+
+    ``rows`` hold one dict per surveyed instance (values in the units each
+    column documents: eigenvalues dimensionless, diameters/hops in hops,
+    loads in injection units, ``seconds`` wall time); ``columns`` fixes the
+    emission order.
+    """
     rows: List[Dict[str, Any]]
     columns: List[str]
 
@@ -127,6 +145,11 @@ class SurveyResult:
         return len(self.rows)
 
     def to_csv(self, path: Optional[str] = None) -> str:
+        """Render rows as CSV in column order (quoting comma-bearing cells).
+
+        Args: ``path`` — optional file to write (parents created).
+        Returns the CSV text either way.
+        """
         text = "\n".join(
             [",".join(self.columns)]
             + [",".join(csv_field(r.get(c)) for c in self.columns)
@@ -138,6 +161,11 @@ class SurveyResult:
         return text
 
     def to_json(self, path: Optional[str] = None) -> str:
+        """Render rows as a JSON array (numpy scalars/arrays coerced).
+
+        Args: ``path`` — optional file to write (parents created).
+        Returns the JSON text either way.
+        """
         text = json.dumps(self.rows, indent=2, default=_json_default)
         if path is not None:
             p = pathlib.Path(path)
@@ -222,13 +250,42 @@ def _fault_values(a: Analysis, cfg: Dict[str, Any]) -> Dict[str, Any]:
     )
 
 
+def _routing_config(routing: Union[bool, Dict[str, Any]]) -> Dict[str, Any]:
+    cfg = {} if routing is True else dict(routing)
+    cfg.setdefault("pattern", "uniform")
+    return cfg
+
+
+def _routing_values(a: Analysis, cfg: Dict[str, Any]) -> Dict[str, Any]:
+    """Measured routing/traffic quantities for one survey row (ROUTING_COLUMNS)."""
+    from repro.core.traffic import spectral_throughput_estimate
+
+    r = a.routing()
+    t = a.traffic(cfg["pattern"])
+    cf = a.closed_forms
+    diameter_ok = None if not cf or "diameter" not in cf \
+        else bool(r.diameter == int(cf["diameter"]))
+    return dict(
+        diameter_bfs=r.diameter,
+        diameter_ok=diameter_ok,
+        avg_hops=_round(r.avg_path_length, 4),
+        path_diversity=_round(r.path_diversity_mean, 4),
+        traffic_pattern=t.pattern,
+        max_link_load=_round(t.max_link_load, 4),
+        saturation_throughput=_round(t.saturation_throughput, 4),
+        throughput_spectral=_round(
+            spectral_throughput_estimate(a.n, a.rho2), 4),
+    )
+
+
 def survey(specs: Sequence[Union[str, Topology, Analysis]],
            columns: Optional[Sequence[str]] = None, *,
            dense_threshold: int = S.DENSE_THRESHOLD,
            lanczos_iters: int = 200, seed: int = 0,
            batch_lanczos: bool = True,
            use_pallas_kernel: bool = False,
-           faults: Optional[Union[float, Dict[str, Any]]] = None
+           faults: Optional[Union[float, Dict[str, Any]]] = None,
+           routing: Optional[Union[bool, Dict[str, Any]]] = None
            ) -> SurveyResult:
     """Uniform spectral survey over many topologies (the paper's Table 1).
 
@@ -243,14 +300,24 @@ def survey(specs: Sequence[Union[str, Topology, Analysis]],
     (``faults=dict(rate=0.1, model="attack_spectral", samples=32)``) runs a
     per-instance fault sweep at that rate and appends the resilience columns
     of :data:`FAULT_COLUMNS` to every row.
+
+    ``routing``: ``True`` or a config dict (``routing=dict(pattern=
+    "adversarial")``) runs the measured path-level analysis — batched
+    all-sources BFS + minimal-path ECMP link loads under one synthetic
+    traffic pattern — appending :data:`ROUTING_COLUMNS` to every row
+    (diameters/hops in hops, loads in injection units).
     """
     cols = list(columns if columns is not None else DEFAULT_COLUMNS)
-    fault_cfg = None
+    fault_cfg = routing_cfg = None
     extra = {"seconds"}
     if faults is not None:
         fault_cfg = _fault_config(faults)
         cols += [c for c in FAULT_COLUMNS if c not in cols]
         extra |= set(FAULT_COLUMNS)    # only meaningful with faults=...
+    if routing not in (None, False):   # {} is a valid all-defaults config
+        routing_cfg = _routing_config(routing)
+        cols += [c for c in ROUTING_COLUMNS if c not in cols]
+        extra |= set(ROUTING_COLUMNS)  # only meaningful with routing=...
     unknown = [c for c in cols if c not in extra and c not in COLUMNS]
     if unknown:
         raise KeyError(f"unknown survey column(s) {unknown}; available: "
@@ -272,6 +339,8 @@ def survey(specs: Sequence[Union[str, Topology, Analysis]],
                if c != "seconds" and c in COLUMNS}
         if fault_cfg is not None:
             row.update(_fault_values(a, fault_cfg))
+        if routing_cfg is not None:
+            row.update(_routing_values(a, routing_cfg))
         if "seconds" in cols:
             # construction + (amortized) batched solve + lazy evaluation, so
             # the column means what the pre-registry benchmark reported

@@ -1,10 +1,10 @@
 """repro.core — the paper's contribution: interconnect topologies, their
-spectra, the Reduction Lemma, Ramanujan (LPS) constructions, and the
-topology-aware collective cost model."""
+spectra, the Reduction Lemma, Ramanujan (LPS) constructions, path-level
+routing/traffic evaluation, and the topology-aware collective cost model."""
 from . import bounds, collectives, faults, graphs, lifts, placement, \
-    properties, ramanujan, reduction, spectral, topologies
+    properties, ramanujan, reduction, routing, spectral, topologies, traffic
 from .graphs import Topology
 
 __all__ = ["Topology", "bounds", "collectives", "faults", "graphs", "lifts",
-           "placement", "properties", "ramanujan", "reduction", "spectral",
-           "topologies"]
+           "placement", "properties", "ramanujan", "reduction", "routing",
+           "spectral", "topologies", "traffic"]

@@ -175,10 +175,11 @@ def _dragonfly(h_nodes: int, h_edges: int, h_bw: float) -> Dict:
 
 
 def _hypercube(d: int) -> Dict:
-    return dict(nodes=2 ** d, radix=d, rho2_ub=2.0, bw_ub=2.0 ** (d - 1))
+    return dict(nodes=2 ** d, radix=d, rho2_ub=2.0, bw_ub=2.0 ** (d - 1),
+                diameter=d)
 
 
-def _peterson_torus(a: int, b: int) -> Dict:
+def _petersen_torus(a: int, b: int) -> Dict:
     return dict(nodes=10 * a * b, radix=4,
                 # Corollary 1
                 rho2_ub=(4 - 3 * math.cos(4 * math.pi / a) - math.cos(2 * math.pi / a)) / 5.0,
@@ -188,13 +189,15 @@ def _peterson_torus(a: int, b: int) -> Dict:
 def _slimfly(q: int) -> Dict:
     return dict(nodes=2 * q * q, radix=(3 * q - 1) / 2.0,
                 rho2_ub=float(q),                 # Proposition 9 (exact)
-                bw_ub=(q ** 3 + q) / 2.0)         # Proposition 10
+                bw_ub=(q ** 3 + q) / 2.0,         # Proposition 10
+                diameter=2)                       # MMS graphs have diameter 2
 
 
 def _torus(k: int, d: int) -> Dict:
     return dict(nodes=k ** d, radix=2 * d,
                 rho2_ub=2.0 * (1 - math.cos(2 * math.pi / k)),
-                bw_ub=2.0 * k ** (d - 1))
+                bw_ub=2.0 * k ** (d - 1),
+                diameter=d * (k // 2))
 
 
 TABLE1: Dict[str, Callable[..., Dict]] = {
@@ -204,8 +207,8 @@ TABLE1: Dict[str, Callable[..., Dict]] = {
     "data_vortex": _data_vortex,
     "dragonfly": _dragonfly,
     "hypercube": _hypercube,
-    "petersen_torus": _peterson_torus,
-    "peterson_torus": _peterson_torus,   # deprecated misspelling (kept for compat)
+    "petersen_torus": _petersen_torus,
+    "peterson_torus": _petersen_torus,   # deprecated misspelling (kept for compat)
     "slimfly": _slimfly,
     "torus": _torus,
 }

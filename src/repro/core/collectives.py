@@ -38,25 +38,44 @@ PER_HOP_LATENCY = 1e-6   # seconds
 
 @dataclasses.dataclass(frozen=True)
 class NetworkModel:
-    """Abstract interconnect: everything the cost model needs."""
+    """Abstract interconnect: everything the cost model needs.
+
+    Units: ``link_bw`` bytes/second per link; ``hop_latency`` seconds per hop;
+    ``diameter``/``avg_hops`` hops; ``bisection_links``/``radix`` link counts;
+    every ``all_reduce``-style method returns **seconds**.
+    """
     name: str
     n: int                  # nodes (chips)
     radix: int              # links per node (as built)
     bisection_links: float  # links crossing the worst balanced cut (guaranteed)
-    diameter: int
+    diameter: int           # hops; measured (routing) or bounded (Theorem 1)
     link_bw: float = LINK_BW
     hop_latency: float = PER_HOP_LATENCY
     rho2: Optional[float] = None          # algebraic connectivity, if known
     effective_radix: Optional[float] = None  # surviving links/node (degraded)
     fault_rate: float = 0.0               # cumulative fraction already failed
+    avg_hops: Optional[float] = None      # measured mean shortest-path hops
 
     # ---- collective times (payload = bytes per node) ----------------------
     def _bw_time(self, inj_bytes: float, cross_bytes: float) -> float:
+        """Bandwidth term: max of per-node injection and bisection bottleneck.
+
+        Args: bytes each node must inject / bytes that must cross the worst
+        balanced cut.  Returns seconds.
+        """
         inj_links = self.effective_radix if self.effective_radix is not None \
             else self.radix
         t_inj = inj_bytes / (inj_links * self.link_bw)
         t_cut = cross_bytes / (self.bisection_links * self.link_bw)
         return max(t_inj, t_cut)
+
+    @property
+    def permute_hops(self) -> float:
+        """Hops a point-to-point permutation flow travels: the *measured*
+        average shortest-path length when a routing analysis supplied one,
+        else the diameter (the conservative fallback).  Dimensionless (hops).
+        """
+        return self.avg_hops if self.avg_hops is not None else float(self.diameter)
 
     # ---- degraded operation ----------------------------------------------
     def degrade(self, fault_rate: float, model: str = "link") -> "NetworkModel":
@@ -64,14 +83,26 @@ class NetworkModel:
         routers ("node") have failed — collective predictions then reflect the
         guaranteed degraded bisection.
 
+        Args:
+            fault_rate: fraction of links/routers failed, in [0, 1).
+            model: ``"link"`` (iid link death) or ``"node"`` (router death;
+                the surviving machine shrinks to ``round(n * (1-r))`` nodes).
+
+        Returns:
+            A new frozen :class:`NetworkModel`; ``degrade(0.0)`` is an exact
+            no-op (returns ``self``) and successive calls compose.
+
         Under iid link failure E[L_degraded] = (1 - r) L, so the certified
         figure is the Fiedler floor at the expected degraded gap
         rho2 * (1 - r) — equivalently the healthy bisection scaled by (1 - r)
         (node failure kills a cut link when either endpoint dies: (1 - r)^2).
         Injection capacity degrades to ``effective_radix = radix * (1 - r)``
         and, when rho2 is known, the diameter is bumped to the Theorem-1
-        (Alon–Milman) upper bound at the degraded gap.  ``degrade(0.0)`` is an
-        exact no-op (returns ``self``); successive calls compose.
+        (Alon–Milman) upper bound at the degraded gap — for a *measured*
+        degraded diameter instead of this analytic cap, route the degraded
+        topology itself (``Analysis.fault_sweep(routing=True)``).  A measured
+        healthy ``avg_hops`` is dropped (it no longer describes the degraded
+        paths), falling latency terms back to the diameter.
         """
         if not 0.0 <= fault_rate < 1.0:
             raise ValueError(f"fault rate must be in [0, 1), got {fault_rate}")
@@ -98,76 +129,113 @@ class NetworkModel:
             self, name=f"{self.name}!{model}@{fault_rate:g}", n=n,
             bisection_links=max(self.bisection_links * cut_survival, 1e-9),
             diameter=diameter, rho2=rho2_deg,
-            effective_radix=inj * s,
+            effective_radix=inj * s, avg_hops=None,
             fault_rate=1.0 - (1.0 - self.fault_rate) * s)
 
     def _lat(self, steps: float) -> float:
+        """Latency term: ``steps`` hops at ``hop_latency`` each.  Seconds."""
         return steps * self.hop_latency
 
     def all_reduce(self, bytes_per_node: float) -> float:
-        """reduce-scatter + all-gather: each node moves 2B(n-1)/n; 2B crosses
-        every bisection (reduced data out + result back)."""
+        """Predicted all-reduce time (reduce-scatter + all-gather).
+
+        Args: ``bytes_per_node`` — payload each node contributes (bytes).
+        Returns seconds.  Each node moves 2B(n-1)/n; 2B crosses every
+        bisection (reduced data out + result back).
+        """
         b = bytes_per_node
         return self._bw_time(2 * b * (self.n - 1) / self.n, 2 * b) \
             + self._lat(2 * self.diameter + 2 * math.log2(max(self.n, 2)))
 
     def reduce_scatter(self, bytes_per_node: float) -> float:
+        """Predicted reduce-scatter time for B input bytes/node.  Seconds."""
         b = bytes_per_node
         return self._bw_time(b * (self.n - 1) / self.n, b) \
             + self._lat(self.diameter + math.log2(max(self.n, 2)))
 
     def all_gather(self, bytes_per_node_out: float) -> float:
-        """Each node ends with B total gathered bytes (B/n contributed each)."""
+        """Predicted all-gather time; each node ends with B total gathered
+        bytes (B/n contributed each).  Returns seconds."""
         b = bytes_per_node_out
         return self._bw_time(b * (self.n - 1) / self.n, b) \
             + self._lat(self.diameter + math.log2(max(self.n, 2)))
 
     def all_to_all(self, bytes_per_node: float) -> float:
-        """Each node sends B split across all peers; B*n/4... cross-traffic =
-        (n/2 senders x B/2 destined across) = n*B/4 over the cut."""
+        """Predicted all-to-all time for B bytes sent per node (split across
+        all peers).  Returns seconds.  Cross-traffic = (n/2 senders x B/2
+        destined across) = n*B/4 over the cut."""
         b = bytes_per_node
         return self._bw_time(b * (self.n - 1) / self.n, self.n * b / 4.0) \
             + self._lat(self.diameter)
 
     def collective_time(self, kind: str, bytes_per_node: float) -> float:
+        """Dispatch by collective name (keys of :data:`COLLECTIVE_FACTORS`).
+
+        Args: ``kind`` collective name; ``bytes_per_node`` payload (bytes).
+        Returns seconds.  ``collective-permute`` travels the *measured*
+        average hop count when known (:attr:`permute_hops`), else the
+        diameter.
+        """
         return {
             "all-reduce": self.all_reduce,
             "all-gather": self.all_gather,
             "reduce-scatter": self.reduce_scatter,
             "all-to-all": self.all_to_all,
-            "collective-permute": lambda b: b / self.link_bw + self._lat(self.diameter),
+            "collective-permute":
+                lambda b: b / self.link_bw + self._lat(self.permute_hops),
         }[kind](bytes_per_node)
 
 
 def network_from_topology(topo: Topology, diameter: Optional[int] = None,
                           rho2: Optional[float] = None,
                           exact_bisection: Optional[float] = None,
-                          vertex_transitive: bool = True) -> NetworkModel:
+                          vertex_transitive: bool = True,
+                          routing: Optional[object] = None) -> NetworkModel:
     """Build the model from a constructed Topology.
 
-    Bisection uses the *guaranteed* (Fiedler) figure unless an exact value is
-    supplied — this is the paper's point: the spectral gap is what a scheduler
-    can certify without solving min-bisection.
+    Args:
+        topo: the physical interconnect graph (must be regular).
+        diameter: known diameter in hops; measured by BFS when omitted.
+        rho2: known algebraic connectivity; solved when omitted.
+        exact_bisection: exact bisection link count, if known.
+        vertex_transitive: lets the BFS diameter use one eccentricity.
+        routing: a :class:`repro.core.routing.RoutingResult` from a path-level
+            analysis; when given, its *measured* exact diameter and average
+            hop count replace the BFS/Theorem-1 figures (``avg_hops`` then
+            drives ``collective-permute`` latency).
+
+    Returns:
+        A :class:`NetworkModel` whose bisection uses the *guaranteed*
+        (Fiedler) figure unless an exact value is supplied — this is the
+        paper's point: the spectral gap is what a scheduler can certify
+        without solving min-bisection.
     """
     from .properties import diameter as diam_fn
     from .spectral import algebraic_connectivity
 
     if rho2 is None:
         rho2 = algebraic_connectivity(topo)
+    avg_hops = None
+    if routing is not None:
+        if diameter is None and routing.exact:
+            diameter = int(routing.diameter)
+        avg_hops = float(routing.avg_path_length)
     if diameter is None:
         diameter = diam_fn(topo, vertex_transitive=vertex_transitive)
     bisection = exact_bisection if exact_bisection is not None \
         else fiedler_bw_lb(topo.n, rho2)
     return NetworkModel(name=topo.name, n=topo.n, radix=topo.radix,
                         bisection_links=max(bisection, 1e-9), diameter=diameter,
-                        rho2=rho2)
+                        rho2=rho2, avg_hops=avg_hops)
 
 
 def tpu_v5e_ici(x: int = 16, y: int = 16) -> NetworkModel:
     """The *faithful* model of a v5e pod: Torus(x) x Torus(y) ICI.
 
+    Args: ``x``, ``y`` — torus extents (chips per ring).
+    Returns a :class:`NetworkModel` with the closed-form figures:
     rho2 = 2(1 - cos(2 pi / max(x,y))) (paper §4.1); bisection of a 2D torus
-    is 2*min(x,y) links; diameter x/2 + y/2.
+    is 2*min(x,y) links; diameter x/2 + y/2 hops.
     """
     n = x * y
     rho2 = 2.0 * (1 - math.cos(2 * math.pi / max(x, y)))

@@ -294,7 +294,9 @@ class FaultSweepResult:
 def fault_sweep(topo: Topology, rates: Sequence[float] = (0.02, 0.05, 0.1, 0.2),
                 model: str = "link", samples: int = 32, seed: int = 0,
                 iters: int = 160, rho2_healthy: Optional[float] = None,
-                fiedler: Optional[np.ndarray] = None) -> FaultSweepResult:
+                fiedler: Optional[np.ndarray] = None,
+                routing: bool = False,
+                routing_sources: Optional[int] = None) -> FaultSweepResult:
     """Survival curves under fault injection, batched per rate.
 
     For each rate, ``samples`` Monte-Carlo scenarios (or one, for the
@@ -309,6 +311,18 @@ def fault_sweep(topo: Topology, rates: Sequence[float] = (0.02, 0.05, 0.1, 0.2),
     bw_fiedler_lb_mean (Theorem 2 at each sample), diameter_ub (Theorem 1 at
     the worst connected sample; None if every sample disconnected), and the
     analytic caps interlacing_rho2_ub (link models only) / weyl_rho2_lb.
+
+    ``routing=True`` feeds each rate's already-stacked padded tables through
+    :func:`repro.core.routing.routing_stats_stacked` — one vmapped BFS for all
+    B samples — appending *measured* degraded path structure per row:
+    ``bfs_diameter_mean/max`` (hops; over fully-reachable samples only, None
+    when every sample disconnected — a shattered sample's max-over-reachable
+    figure would shrink, not grow; exact per sample when all sources run,
+    else a lower bound), ``bfs_avg_hops_mean`` (over reachable pairs),
+    ``reachable_frac_mean``.
+    ``routing_sources`` caps the BFS sources per sample (default: all vertices
+    up to n=512, then 64 sampled sources — the knob trades exactness for time
+    on large instances).
     """
     if model not in FAULT_MODELS:
         raise ValueError(f"unknown fault model {model!r} (known: {FAULT_MODELS})")
@@ -364,6 +378,31 @@ def fault_sweep(topo: Topology, rates: Sequence[float] = (0.02, 0.05, 0.1, 0.2),
         row["diameter_ub"] = float(B.alon_milman_diameter_ub(
             n_s, kmax, float(conn_rho2.min()))) \
             if conn_rho2.size and conn_rho2.min() > 1e-9 else None
+        if routing:
+            from .routing import routing_stats_stacked
+            rng = np.random.default_rng(seed)
+            if routing_sources is None:
+                srcs = None if n_s <= 512 else \
+                    np.sort(rng.choice(n_s, size=64, replace=False))
+            else:
+                srcs = None if routing_sources >= n_s else \
+                    np.sort(rng.choice(n_s, size=routing_sources,
+                                       replace=False))
+            stats = routing_stats_stacked(tabs, sources=srcs)
+            # diameter stats only over samples whose sampled pairs all
+            # connect — a shattered sample's max-over-reachable "diameter"
+            # shrinks as components do, which would read as paths improving
+            # under faults (same restriction diameter_ub applies via
+            # conn_rho2); reachable_frac_mean carries the disconnection signal
+            conn_stats = [s for s in stats if s["reachable_frac"] == 1.0]
+            row["bfs_diameter_mean"] = float(np.mean(
+                [s["diameter"] for s in conn_stats])) if conn_stats else None
+            row["bfs_diameter_max"] = int(max(
+                s["diameter"] for s in conn_stats)) if conn_stats else None
+            row["bfs_avg_hops_mean"] = float(
+                np.mean([s["avg_path_length"] for s in stats]))
+            row["reachable_frac_mean"] = float(
+                np.mean([s["reachable_frac"] for s in stats]))
         rows.append(row)
     return FaultSweepResult(
         name=topo.name, model=model, n=topo.n, m=topo.m, samples=B_samples,

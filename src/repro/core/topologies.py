@@ -46,32 +46,32 @@ def _cf_exact(table_entry: Callable[..., dict]) -> Callable[..., dict]:
 
 def _cf_path(n: int) -> dict:
     return dict(nodes=n, rho2_ub=2.0 * (1 - math.cos(math.pi / n)),
-                rho2_exact=True)
+                rho2_exact=True, diameter=n - 1)
 
 
 def _cf_path_looped(n: int) -> dict:
     return dict(nodes=n, radix=2, rho2_ub=2.0 * (1 - math.cos(math.pi / n)),
-                rho2_exact=True)
+                rho2_exact=True, diameter=n - 1)
 
 
 def _cf_cycle(n: int) -> dict:
     return dict(nodes=n, radix=2, rho2_ub=2.0 * (1 - math.cos(2 * math.pi / n)),
-                rho2_exact=True)
+                rho2_exact=True, diameter=n // 2)
 
 
 def _cf_complete(n: int) -> dict:
     return dict(nodes=n, radix=n - 1, rho2_ub=float(n), rho2_exact=True,
-                bw_ub=float((n // 2) * (n - n // 2)))
+                bw_ub=float((n // 2) * (n - n // 2)), diameter=1)
 
 
 def _cf_petersen() -> dict:
-    return dict(nodes=10, radix=3, rho2_ub=2.0, rho2_exact=True)
+    return dict(nodes=10, radix=3, rho2_ub=2.0, rho2_exact=True, diameter=2)
 
 
 def _cf_grid(*ks: int) -> dict:
     return dict(nodes=int(np.prod(ks)),
                 rho2_ub=2.0 * (1 - math.cos(math.pi / max(ks))),
-                rho2_exact=True)
+                rho2_exact=True, diameter=int(sum(k - 1 for k in ks)))
 
 
 def _cf_fat_tree(depth: int, base_mult: int = 1) -> dict:

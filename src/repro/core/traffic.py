@@ -1,0 +1,321 @@
+"""Synthetic traffic patterns + minimal-path ECMP link-load accounting.
+
+The routing layer (:mod:`repro.core.routing`) measures where shortest paths
+*are*; this module loads them.  Each traffic pattern is a demand matrix
+``D[s, t]`` normalized so every node injects at most 1 unit of traffic
+(``sum_t D[s, t] <= 1``); flows follow **all** minimal paths with equal
+splitting at every branch (ECMP, the SpectralFly evaluation model): the flow
+from s to t crossing edge (u, v) on a shortest-path DAG is
+``D[s,t] * sigma(s,u) * sigma(v,t) / sigma(s,t)``, computed by a Brandes-style
+backward accumulation over BFS layers — one vectorized gather per layer,
+batched over sources.
+
+Units
+-----
+* demands and link loads are in *injection units*: load 1.0 on a directed
+  link means it carries exactly one node's full injection rate;
+* ``saturation_throughput`` = 1 / max link load: the factor every node can
+  scale its injection by before the hottest link saturates (unit link
+  capacity), dimensionless;
+* conservation: the sum of all directed link loads equals
+  ``sum_{s,t} D[s,t] * hops(s,t)`` exactly — each unit of flow occupies one
+  unit of load per hop traversed.
+
+Patterns (:data:`TRAFFIC_PATTERNS`)
+-----------------------------------
+* ``uniform``        — all-to-all, ``D[s, t] = 1/(n-1)``
+* ``bit_complement`` — permutation ``t = (n-1) - s`` (bitwise complement when
+  n is a power of two)
+* ``transpose``      — permutation ``(a, b) → (b, a)`` for n = m*m (matrix
+  transpose); raises for non-square n
+* ``neighbor``       — nearest-neighbor stencil: half a unit to each of
+  ``s ± 1 (mod n)``
+* ``adversarial``    — spectrally adversarial permutation: vertices sorted by
+  Fiedler value are matched first-to-last, forcing every flow across the
+  sparsest (Fiedler) cut
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import time
+from typing import Dict, Optional, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .graphs import Topology
+from .routing import DEFAULT_SOURCE_CHUNK, RoutingResult, analyze_routing
+
+__all__ = [
+    "TRAFFIC_PATTERNS", "TrafficResult", "demand_matrix", "ecmp_link_loads",
+    "evaluate_traffic", "spectral_throughput_estimate",
+]
+
+TRAFFIC_PATTERNS = ("uniform", "bit_complement", "transpose", "neighbor",
+                    "adversarial")
+
+
+# --------------------------------------------------------------------------
+# demand matrices
+# --------------------------------------------------------------------------
+
+def _permutation_demands(perm: np.ndarray) -> np.ndarray:
+    """Demand matrix of a permutation: one unit from s to perm[s] (fixed
+    points send nothing — a node never loads the network talking to itself)."""
+    n = perm.size
+    D = np.zeros((n, n))
+    s = np.arange(n)
+    keep = perm != s
+    D[s[keep], perm[keep]] = 1.0
+    return D
+
+
+def demand_matrix(pattern: str, n: int, *,
+                  fiedler: Optional[np.ndarray] = None) -> np.ndarray:
+    """Build the (n, n) demand matrix of a named synthetic pattern.
+
+    Args:
+        pattern: one of :data:`TRAFFIC_PATTERNS`.
+        n: number of nodes.
+        fiedler: (n,) Fiedler vector, required by ``adversarial`` (it defines
+            the cut the permutation stresses).
+
+    Returns:
+        (n, n) float64 demands in injection units; row sums are <= 1 and the
+        diagonal is 0.
+    """
+    if pattern == "uniform":
+        if n < 2:
+            raise ValueError("uniform traffic needs n >= 2")
+        D = np.full((n, n), 1.0 / (n - 1))
+        np.fill_diagonal(D, 0.0)
+        return D
+    if pattern == "bit_complement":
+        return _permutation_demands(n - 1 - np.arange(n))
+    if pattern == "transpose":
+        m = math.isqrt(n)
+        if m * m != n:
+            raise ValueError(f"transpose traffic needs square n, got {n}")
+        s = np.arange(n)
+        return _permutation_demands((s % m) * m + s // m)
+    if pattern == "neighbor":
+        D = np.zeros((n, n))
+        s = np.arange(n)
+        D[s, (s + 1) % n] += 0.5
+        D[s, (s - 1) % n] += 0.5
+        np.fill_diagonal(D, 0.0)   # n <= 2 degenerates to self-traffic
+        return D
+    if pattern == "adversarial":
+        if fiedler is None:
+            raise ValueError("adversarial traffic needs the Fiedler vector")
+        order = np.argsort(np.asarray(fiedler, dtype=np.float64), kind="stable")
+        perm = np.empty(n, dtype=np.int64)
+        perm[order] = order[::-1]
+        return _permutation_demands(perm)
+    raise ValueError(f"unknown traffic pattern {pattern!r} "
+                     f"(known: {TRAFFIC_PATTERNS})")
+
+
+# --------------------------------------------------------------------------
+# ECMP link loads (Brandes-style backward accumulation, batched over sources)
+# --------------------------------------------------------------------------
+
+@jax.jit
+def _ecmp_loads_chunk(table: jnp.ndarray, dist: jnp.ndarray,
+                      sigma: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    """Summed per-edge ECMP loads for a (S, n) block of sources.
+
+    For each source: backward accumulation over BFS layers d = dmax..1 of
+    ``g(v) = w(v) + sigma(v) * sum_{v' in succ(v)} g(v')/sigma(v')`` (the
+    demand subtree routed through v), then the per-slot directed edge loads
+    ``load[u, j] = sigma(u) * g(v)/sigma(v)`` for ``v = table[u, j]`` one hop
+    further out.  Self-padded slots have equal dist and drop out of the mask.
+    Returns the (n, k) load table summed over the block's sources.
+    """
+    dmax = jnp.maximum(dist.max(), 0)
+
+    def one(dist_s, sigma_s, w_s):
+        sigma_safe = jnp.where(sigma_s > 0, sigma_s, 1.0)
+
+        def back(i, g):
+            d = dmax - i
+            h = jnp.where(dist_s == d, g / sigma_safe, 0.0)
+            inc = h[table].sum(axis=1)
+            return jnp.where(dist_s == d - 1, g + sigma_s * inc, g)
+
+        g = jax.lax.fori_loop(0, dmax, back, w_s)
+        ratio = jnp.where(dist_s > 0, g / sigma_safe, 0.0)
+        succ = dist_s[table] == (dist_s[:, None] + 1)
+        return sigma_s[:, None] * jnp.where(succ, ratio[table], 0.0)
+
+    return jax.vmap(one)(dist, sigma, w).sum(axis=0)
+
+
+def ecmp_link_loads(table: np.ndarray, dist: np.ndarray, sigma: np.ndarray,
+                    demands: np.ndarray,
+                    chunk: int = DEFAULT_SOURCE_CHUNK) -> np.ndarray:
+    """Directed link loads under minimal-path ECMP routing of ``demands``.
+
+    Args:
+        table: (n, k) padded neighbor table (``gather_operands()[0]``).
+        dist: (S, n) BFS distances from :func:`repro.core.routing.bfs_distances`.
+        sigma: (S, n) minimal-path counts matching ``dist``.
+        demands: (S, n) demand rows in injection units, one per BFS source
+            (row s holds D[s, :]).  Demands to unreachable targets are ignored
+            (dropped, reported by :func:`evaluate_traffic`).
+        chunk: sources per jitted call.
+
+    Returns:
+        (n, k) float64 directed loads aligned with the table slots: entry
+        ``[u, j]`` is the load on directed link u → table[u, j] (padding slots
+        stay 0; parallel edges each get their ECMP share).
+    """
+    table = np.asarray(table)
+    tab = jnp.asarray(table, dtype=jnp.int32)
+    # a demand to an unreachable target would otherwise sit in g forever
+    demands = np.where(dist >= 0, demands, 0.0)
+    loads = np.zeros(table.shape, dtype=np.float64)
+    for lo in range(0, dist.shape[0], chunk):
+        hi = min(lo + chunk, dist.shape[0])
+        loads += np.asarray(_ecmp_loads_chunk(
+            tab, jnp.asarray(dist[lo:hi]),
+            jnp.asarray(sigma[lo:hi], dtype=jnp.float32),
+            jnp.asarray(demands[lo:hi], dtype=jnp.float32)), dtype=np.float64)
+    return loads
+
+
+# --------------------------------------------------------------------------
+# evaluation driver
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class TrafficResult:
+    """Link-load accounting of one pattern on one topology.
+
+    ``max_link_load``/``mean_link_load`` are per *directed* link in injection
+    units (each undirected edge is two directed links, loaded independently);
+    ``saturation_throughput`` = 1/max load; ``conservation_error`` is the
+    relative gap between the load sum and the demand-weighted hop count
+    (should be float32-roundoff small).
+    """
+    name: str
+    pattern: str
+    n: int
+    total_demand: float            # injection units offered (reachable pairs)
+    dropped_demand: float          # injection units to unreachable targets
+    avg_hops: float                # demand-weighted mean shortest-path hops
+    link_loads: np.ndarray         # (n, k) directed loads (gather-table slots)
+    max_link_load: float
+    mean_link_load: float          # over loaded (non-padding) directed slots
+    saturation_throughput: float   # 1 / max_link_load (inf if no load)
+    conservation_error: float
+    seconds: float
+
+    def to_dict(self) -> Dict:
+        """JSON-ready summary (drops the (n, k) load table)."""
+        return dict(
+            name=self.name, pattern=self.pattern, n=self.n,
+            total_demand=round(self.total_demand, 6),
+            dropped_demand=round(self.dropped_demand, 6),
+            avg_hops=round(self.avg_hops, 6),
+            max_link_load=round(self.max_link_load, 6),
+            mean_link_load=round(self.mean_link_load, 6),
+            saturation_throughput=round(self.saturation_throughput, 6),
+            conservation_error=self.conservation_error,
+            seconds=round(self.seconds, 3))
+
+    def report(self) -> str:
+        """Compact text block for CLI reports."""
+        return "\n".join([
+            f"traffic         : {self.pattern} "
+            f"({self.total_demand:.1f} units offered, "
+            f"{self.avg_hops:.3f} avg hops)",
+            f"max link load   : {self.max_link_load:.4f} "
+            f"(mean {self.mean_link_load:.4f}) injection units",
+            f"saturation thpt : {self.saturation_throughput:.4f} "
+            f"injection fraction/node",
+        ])
+
+
+def evaluate_traffic(topo: Union[Topology, Tuple[np.ndarray, int]],
+                     pattern: str = "uniform", *,
+                     routing: Optional[RoutingResult] = None,
+                     fiedler: Optional[np.ndarray] = None,
+                     demands: Optional[np.ndarray] = None,
+                     chunk: int = DEFAULT_SOURCE_CHUNK) -> TrafficResult:
+    """Route one synthetic pattern over a topology and account link loads.
+
+    Args:
+        topo: a :class:`Topology` or ``(table, n)`` padded-table pair.
+        pattern: name from :data:`TRAFFIC_PATTERNS` (ignored when ``demands``
+            is given, which then also names the result's pattern ``custom``).
+        routing: reuse an all-sources :class:`RoutingResult` (e.g. the one a
+            lazy Analysis session already computed); computed here if absent.
+        fiedler: Fiedler vector for the ``adversarial`` pattern.
+        demands: explicit (n, n) demand matrix in injection units, overriding
+            ``pattern``.
+        chunk: sources per jitted call.
+
+    Returns:
+        :class:`TrafficResult` with per-directed-link loads and the
+        max-load / saturation-throughput summary.
+    """
+    t0 = time.time()
+    if isinstance(topo, Topology):
+        name, n = topo.name, topo.n
+        table = topo.gather_operands()[0]
+    else:
+        table, n = np.asarray(topo[0]), int(topo[1])
+        name = f"table(n={n})"
+    if routing is None:
+        routing = analyze_routing((table, n), chunk=chunk)
+    if not routing.exact:
+        raise ValueError("traffic evaluation needs an all-sources routing "
+                         f"result (got {routing.sources.size}/{n} sources)")
+    if demands is None:
+        D = demand_matrix(pattern, n, fiedler=fiedler)
+    else:
+        D = np.asarray(demands, dtype=np.float64)
+        if D.shape != (n, n):
+            raise ValueError(f"demands must be ({n}, {n}), got {D.shape}")
+        pattern = "custom"
+    reachable = routing.dist >= 0
+    served = np.where(reachable, D, 0.0)
+    np.fill_diagonal(served, 0.0)
+    total = float(served.sum())
+    dropped = float(D.sum() - np.trace(D) - total)
+    loads = ecmp_link_loads(table, routing.dist, routing.sigma, served,
+                            chunk=chunk)
+    hops_weighted = float((served * np.maximum(routing.dist, 0)).sum())
+    load_sum = float(loads.sum())
+    max_load = float(loads.max()) if loads.size else 0.0
+    loaded = loads[loads > 0]
+    return TrafficResult(
+        name=name, pattern=pattern, n=n, total_demand=total,
+        dropped_demand=dropped,
+        avg_hops=hops_weighted / total if total > 0 else 0.0,
+        link_loads=loads, max_link_load=max_load,
+        mean_link_load=float(loaded.mean()) if loaded.size else 0.0,
+        saturation_throughput=1.0 / max_load if max_load > 0 else float("inf"),
+        conservation_error=abs(load_sum - hops_weighted)
+        / max(hops_weighted, 1e-12),
+        seconds=time.time() - t0)
+
+
+def spectral_throughput_estimate(n: int, rho2: float) -> float:
+    """Uniform-traffic saturation throughput predicted from the spectral gap.
+
+    Uniform all-to-all pushes ``|X| * |Y| / (n-1)`` injection units across any
+    (X, Y) cut per direction; supporting that over the Fiedler bisection floor
+    (Theorem 2, ``rho2 * n / 4`` links at unit capacity) needs
+    ``theta = BW * (n-1) / (n/2)^2 ≈ rho2`` — the spectral prediction the
+    measured ECMP figure is compared against.  Deliberately uncapped, exactly
+    like :attr:`TrafficResult.saturation_throughput` (both can exceed 1: a
+    node injects over all ``radix`` links at once).  Dimensionless, same
+    units as the measured figure.
+    """
+    lo, hi = n // 2, n - n // 2
+    bw = rho2 * n / 4.0
+    return bw * (n - 1) / float(lo * hi)

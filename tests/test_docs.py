@@ -1,0 +1,55 @@
+"""The CI docs gate must pass from the repo checkout (dead intra-repo links,
+repro.api coverage of docs/api.md, registered-family coverage)."""
+import pathlib
+import subprocess
+import sys
+
+ROOT = pathlib.Path(__file__).parents[1]
+
+
+def test_docs_gate_passes():
+    proc = subprocess.run(
+        [sys.executable, str(ROOT / "tools" / "check_docs.py"),
+         "--root", str(ROOT)],
+        capture_output=True, text=True)
+    assert proc.returncode == 0, proc.stderr
+
+
+def test_docs_gate_catches_dead_link(tmp_path):
+    """The checker actually fires: a doc tree with a dead link fails."""
+    (tmp_path / "docs").mkdir()
+    (tmp_path / "src/repro/api").mkdir(parents=True)
+    (tmp_path / "src/repro/core").mkdir(parents=True)
+    (tmp_path / "src/repro/api/__init__.py").write_text('__all__ = ["build"]')
+    for f in ("topologies.py", "ramanujan.py"):
+        (tmp_path / "src/repro/core" / f).write_text("")
+    (tmp_path / "docs/api.md").write_text("`build` documented")
+    (tmp_path / "README.md").write_text("[gone](docs/missing.md)")
+    for f in ("architecture.md", "theory.md"):
+        (tmp_path / "docs" / f).write_text("ok")
+    proc = subprocess.run(
+        [sys.executable, str(ROOT / "tools" / "check_docs.py"),
+         "--root", str(tmp_path)],
+        capture_output=True, text=True)
+    assert proc.returncode == 1
+    assert "dead link" in proc.stderr
+
+
+def test_docs_gate_catches_undocumented_symbol(tmp_path):
+    (tmp_path / "docs").mkdir()
+    (tmp_path / "src/repro/api").mkdir(parents=True)
+    (tmp_path / "src/repro/core").mkdir(parents=True)
+    (tmp_path / "src/repro/api/__init__.py").write_text(
+        '__all__ = ["build", "UNHEARD_OF"]')
+    for f in ("topologies.py", "ramanujan.py"):
+        (tmp_path / "src/repro/core" / f).write_text("")
+    (tmp_path / "docs/api.md").write_text("`build` documented")
+    (tmp_path / "README.md").write_text("no links")
+    for f in ("architecture.md", "theory.md"):
+        (tmp_path / "docs" / f).write_text("ok")
+    proc = subprocess.run(
+        [sys.executable, str(ROOT / "tools" / "check_docs.py"),
+         "--root", str(tmp_path)],
+        capture_output=True, text=True)
+    assert proc.returncode == 1
+    assert "UNHEARD_OF" in proc.stderr

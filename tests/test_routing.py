@@ -1,0 +1,309 @@
+"""Path-level routing & traffic evaluation: BFS exactness, ECMP conservation,
+and degraded-topology consistency with the fault subsystem."""
+import numpy as np
+import pytest
+
+from repro.core import faults as F
+from repro.core import properties as P
+from repro.core import topologies as T
+from repro.core.routing import (analyze_routing, bfs_distances,
+                                routing_stats_stacked, shortest_path_counts)
+from repro.core.traffic import (TRAFFIC_PATTERNS, demand_matrix,
+                                evaluate_traffic, spectral_throughput_estimate)
+
+
+# --------------------------------------------------------------------------
+# BFS distances / diameter
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("build", [
+    T.petersen,
+    lambda: T.complete(4),
+    lambda: T.cycle(9),
+    lambda: T.cycle(12),
+    lambda: T.torus(5, 2),
+    lambda: T.generalized_grid([4, 3]),
+], ids=["petersen", "K4", "ring9", "ring12", "torus5x2", "grid4x3"])
+def test_bfs_diameter_matches_properties(build):
+    g = build()
+    r = analyze_routing(g)
+    assert r.exact
+    assert r.diameter == P.diameter(g)
+    assert r.unreachable_pairs == 0
+
+
+def test_bfs_distances_match_networkx():
+    nx = pytest.importorskip("networkx")
+    g = T.random_regular(24, 3, seed=2)
+    dist = bfs_distances(g.gather_operands()[0])
+    G = g.to_networkx()
+    for s in range(g.n):
+        lengths = nx.single_source_shortest_path_length(G, s)
+        for t in range(g.n):
+            assert dist[s, t] == lengths.get(t, -1)
+
+
+def test_closed_form_diameters():
+    """Registered Table-1 diameter closed forms match measured BFS."""
+    from repro.api import Analysis
+
+    for spec in ["torus(6,2)", "torus(5,3)", "hypercube(6)", "cycle(11)",
+                 "complete(9)", "petersen", "grid(4,3,2)", "slimfly(5)"]:
+        a = Analysis(spec)
+        cf = a.closed_forms
+        assert cf is not None and "diameter" in cf, spec
+        assert a.routing().diameter == int(cf["diameter"]), spec
+
+
+def test_hop_distribution_symmetry_vertex_transitive():
+    """Every source of a vertex-transitive graph sees the same hop profile."""
+    for g in (T.petersen(), T.torus(5, 2), T.hypercube(5), T.cycle(10)):
+        r = analyze_routing(g)
+        hists = np.stack([np.bincount(row[row > 0],
+                                      minlength=r.diameter + 1)
+                          for row in r.dist])
+        assert (hists == hists[0]).all(), g.name
+
+
+def test_sampled_sources_give_lower_bound():
+    g = T.generalized_grid([9])      # path: diameter 8, ecc(4) = 4
+    r = analyze_routing(g, sources=[4])
+    assert not r.exact
+    assert r.diameter == 4           # sampled diameter is only a lower bound
+
+
+# --------------------------------------------------------------------------
+# minimal-path counts (path diversity)
+# --------------------------------------------------------------------------
+
+def test_path_counts_match_networkx():
+    nx = pytest.importorskip("networkx")
+    g = T.random_regular(20, 4, seed=1)
+    tab = g.gather_operands()[0]
+    dist = bfs_distances(tab)
+    sigma = shortest_path_counts(tab, dist)
+    G = g.to_networkx()
+    for s in [0, 7, 13]:
+        for t in range(g.n):
+            if s == t:
+                assert sigma[s, t] == 1
+                continue
+            want = len(list(nx.all_shortest_paths(G, s, t)))
+            assert sigma[s, t] == want, (s, t)
+
+
+def test_path_counts_known_graphs():
+    # Petersen (girth 5): all shortest paths unique
+    r = analyze_routing(T.petersen())
+    assert r.path_diversity_mean == 1.0 and r.path_diversity_min == 1.0
+    # hypercube: sigma(s, t) = (hamming distance)!
+    r = analyze_routing(T.hypercube(4))
+    import math
+    for t in range(16):
+        assert r.sigma[0, t] == math.factorial(bin(t).count("1"))
+
+
+# --------------------------------------------------------------------------
+# traffic patterns
+# --------------------------------------------------------------------------
+
+def test_demand_matrices_normalized():
+    n = 16
+    for pattern in ("uniform", "bit_complement", "transpose", "neighbor"):
+        D = demand_matrix(pattern, n)
+        assert D.shape == (n, n)
+        assert np.all(np.diag(D) == 0.0)
+        assert np.all(D.sum(axis=1) <= 1.0 + 1e-12), pattern
+    # permutations really are permutations: row/col sums are one unit, except
+    # fixed points (transpose's diagonal a == b), which send nothing
+    D = demand_matrix("bit_complement", n)
+    assert np.allclose(D.sum(axis=1), 1.0) and np.allclose(D.sum(axis=0), 1.0)
+    D = demand_matrix("transpose", n)
+    row = D.sum(axis=1)
+    m = 4
+    assert (row == 0.0).sum() == m           # the m fixed points (a, a)
+    assert np.allclose(row[row > 0], 1.0)
+    assert np.array_equal(D.sum(axis=0), row)
+    with pytest.raises(ValueError):
+        demand_matrix("transpose", 12)       # not square
+    with pytest.raises(ValueError):
+        demand_matrix("adversarial", 8)      # needs the Fiedler vector
+    with pytest.raises(ValueError):
+        demand_matrix("carpool", 8)
+
+
+def test_adversarial_demands_are_permutation():
+    from repro.core.spectral import fiedler_vector
+
+    g = T.torus(4, 2)
+    D = demand_matrix("adversarial", g.n, fiedler=fiedler_vector(g))
+    assert np.allclose(D.sum(axis=1), 1.0)
+    assert np.allclose(D.sum(axis=0), 1.0)
+
+
+# --------------------------------------------------------------------------
+# ECMP load accounting
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("pattern", ["uniform", "bit_complement", "neighbor"])
+@pytest.mark.parametrize("build", [
+    T.petersen, lambda: T.torus(4, 2), lambda: T.random_regular(18, 4, seed=0),
+], ids=["petersen", "torus4x2", "rr18"])
+def test_ecmp_load_conservation(build, pattern):
+    """Sum of directed link loads == sum of demand * hops (each unit of flow
+    occupies one load unit per hop)."""
+    g = build()
+    t = evaluate_traffic(g, pattern)
+    want = t.total_demand * t.avg_hops
+    assert t.link_loads.sum() == pytest.approx(want, rel=1e-5)
+    assert t.conservation_error < 1e-4
+    assert t.dropped_demand == 0.0
+
+
+def test_ecmp_complete_graph_uniform():
+    """K_n: every pair is one hop, each directed link carries exactly its
+    source's per-peer demand 1/(n-1); throughput saturates at n-1."""
+    t = evaluate_traffic(T.complete(8), "uniform")
+    loads = t.link_loads
+    assert np.allclose(loads, 1.0 / 7.0)
+    assert t.saturation_throughput == pytest.approx(7.0, rel=1e-5)
+
+
+def test_ecmp_splits_across_parallel_shortest_paths():
+    """4-cycle, opposite corners: two equal shortest paths, half a unit each."""
+    g = T.cycle(4)
+    D = np.zeros((4, 4))
+    D[0, 2] = 1.0
+    t = evaluate_traffic(g, demands=D)
+    # every traversed directed link carries exactly 0.5
+    loaded = t.link_loads[t.link_loads > 0]
+    assert np.allclose(loaded, 0.5) and loaded.size == 4
+    assert t.max_link_load == pytest.approx(0.5)
+
+
+def test_unreachable_demand_is_dropped():
+    g = T.Topology("twopairs", 4, np.array([[0, 1], [2, 3]]))
+    t = evaluate_traffic(g, "uniform")
+    # only the in-component demand is served
+    assert t.dropped_demand == pytest.approx(4 * 2 / 3)
+    assert t.total_demand == pytest.approx(4 * 1 / 3)
+    assert t.conservation_error < 1e-5
+
+
+def test_spectral_throughput_estimate_units():
+    # the cut-based prediction is ~rho2 (uncapped, like the measured figure)
+    assert spectral_throughput_estimate(256, 2.0) == pytest.approx(2.0, rel=0.02)
+    assert spectral_throughput_estimate(256, 0.15) == pytest.approx(
+        0.15, rel=0.02)
+    assert spectral_throughput_estimate(338, 13.0) == pytest.approx(13.0, rel=0.02)
+
+
+# --------------------------------------------------------------------------
+# degraded-topology routing (fault subsystem integration)
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("model,rate", [("link", 0.15), ("node", 0.1)])
+def test_degraded_routing_consistent_with_apply_faults(model, rate):
+    """Routing over the stacked padded operands == routing the materialized
+    apply_faults topology directly."""
+    g = T.torus(5, 2)
+    scens = [F.make_scenario(g, model, rate, seed=s) for s in range(4)]
+    degraded = [F.apply_faults(g, sc) for sc in scens]
+    tabs, _, _ = F.stacked_operands(degraded)
+    stacked = routing_stats_stacked(tabs)
+    for d, st in zip(degraded, stacked):
+        direct = analyze_routing(d)
+        assert st["diameter"] == direct.diameter
+        assert st["avg_path_length"] == pytest.approx(direct.avg_path_length)
+        assert st["unreachable_pairs"] == direct.unreachable_pairs
+
+
+def test_fault_sweep_routing_rows():
+    from repro.api import Analysis
+
+    a = Analysis("petersen_torus(5,4)")
+    sweep = a.fault_sweep(rates=(0.0, 0.1), model="link", samples=4,
+                          routing=True)
+    r0, r1 = sweep.rows
+    healthy = a.routing()
+    # rate 0: the measured degraded structure equals the healthy one
+    assert r0["bfs_diameter_mean"] == healthy.diameter
+    assert r0["bfs_avg_hops_mean"] == pytest.approx(healthy.avg_path_length)
+    assert r0["reachable_frac_mean"] == 1.0
+    # removing links never shortens paths
+    assert r1["bfs_diameter_mean"] >= r0["bfs_diameter_mean"]
+    assert r1["bfs_avg_hops_mean"] >= r0["bfs_avg_hops_mean"]
+    assert 0.0 <= r1["reachable_frac_mean"] <= 1.0
+
+
+def test_fault_sweep_routing_disconnected_samples_report_none():
+    """A shattered sample must not report its shrunken max-over-reachable
+    figure as a 'diameter': cutting 2 Fiedler-heavy edges splits a cycle."""
+    from repro.api import Analysis
+
+    sweep = Analysis("cycle(8)").fault_sweep(
+        rates=(0.25,), model="attack_spectral", routing=True)
+    row = sweep.rows[0]
+    assert row["reachable_frac_mean"] < 1.0
+    assert row["bfs_diameter_mean"] is None
+    assert row["bfs_diameter_max"] is None
+
+
+# --------------------------------------------------------------------------
+# API / survey / cost-model wiring
+# --------------------------------------------------------------------------
+
+def test_analysis_routing_cached_and_traffic():
+    from repro.api import Analysis
+
+    a = Analysis("torus(4,2)")
+    assert a.routing() is a.routing()          # cached default
+    assert a.traffic("uniform") is a.traffic("uniform")
+    assert a.routing().diameter == a.diameter == 4
+    sub = a.routing(sources=[0, 1])            # sampled: fresh, not cached
+    assert sub.sources.size == 2 and not sub.exact
+
+
+def test_survey_routing_columns():
+    from repro.api import ROUTING_COLUMNS, survey
+
+    res = survey(["petersen", "torus(4,2)", "complete(6)"], routing=True)
+    for col in ROUTING_COLUMNS:
+        assert col in res.columns
+    by = {r["topology"]: r for r in res.rows}
+    assert by["petersen"]["diameter_bfs"] == 2
+    assert by["petersen"]["diameter_ok"] is True
+    assert by["torus"]["diameter_ok"] is True
+    assert by["complete"]["saturation_throughput"] == pytest.approx(5.0)
+    for r in res.rows:
+        assert r["traffic_pattern"] == "uniform"
+        assert r["throughput_spectral"] > 0
+    # an empty config dict means "all defaults", not "off"
+    res2 = survey(["petersen"], routing={})
+    assert "diameter_bfs" in res2.columns and res2.rows[0]["diameter_bfs"] == 2
+    # and False/None disable
+    assert "diameter_bfs" not in survey(["petersen"], routing=False).columns
+
+
+def test_network_model_uses_measured_routing():
+    from repro.api import Analysis
+    from repro.core.collectives import network_from_topology
+
+    a = Analysis("torus(4,2)")
+    net = network_from_topology(a.topo, rho2=a.rho2, routing=a.routing())
+    assert net.diameter == a.routing().diameter
+    assert net.avg_hops == pytest.approx(a.routing().avg_path_length)
+    assert net.permute_hops < net.diameter     # avg hops < diameter here
+    # permute latency uses measured avg hops; degraded view drops it
+    assert net.degrade(0.1).avg_hops is None
+    plain = network_from_topology(a.topo, rho2=a.rho2)
+    assert plain.avg_hops is None and plain.permute_hops == plain.diameter
+    assert net.collective_time("collective-permute", 1 << 20) <= \
+        plain.collective_time("collective-permute", 1 << 20)
+
+
+def test_traffic_requires_exact_routing():
+    g = T.torus(4, 2)
+    partial = analyze_routing(g, sources=[0, 1, 2])
+    with pytest.raises(ValueError):
+        evaluate_traffic(g, "uniform", routing=partial)

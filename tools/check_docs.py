@@ -1,0 +1,134 @@
+"""CI docs gate: dead intra-repo links + API coverage of the docs site.
+
+Checks, with **stdlib only** (no numpy/jax — the CI docs job installs
+nothing):
+
+1. every relative markdown link in ``docs/*.md`` and ``README.md`` resolves
+   to an existing file (http(s)/mailto/pure-anchor links are skipped);
+2. every public symbol of ``repro.api`` (the ``__all__`` literal, read by AST
+   so nothing is imported) appears in ``docs/api.md``;
+3. every registered topology family name (the ``@register("name", ...)``
+   decorators in ``repro/core/topologies.py`` / ``ramanujan.py``, also read
+   by AST) appears in ``docs/api.md``.
+
+Exit code 0 when clean, 1 with a per-failure listing otherwise::
+
+    python tools/check_docs.py [--root REPO_ROOT]
+"""
+from __future__ import annotations
+
+import argparse
+import ast
+import pathlib
+import re
+import sys
+from typing import List
+
+#: [text](target) — target captured up to the closing paren (no nesting in
+#: our docs); images ![alt](target) match the same tail.
+_LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+
+DOC_FILES = ["README.md", "docs/architecture.md", "docs/theory.md",
+             "docs/api.md"]
+API_INIT = "src/repro/api/__init__.py"
+REGISTER_FILES = ["src/repro/core/topologies.py", "src/repro/core/ramanujan.py"]
+
+
+def check_links(root: pathlib.Path, md_files: List[pathlib.Path]) -> List[str]:
+    """Dead relative links in the given markdown files."""
+    errors = []
+    for md in md_files:
+        text = md.read_text()
+        # fenced code blocks are not navigation; skip their pseudo-links
+        text = re.sub(r"```.*?```", "", text, flags=re.DOTALL)
+        for m in _LINK_RE.finditer(text):
+            target = m.group(1)
+            if target.startswith(("http://", "https://", "mailto:", "#")):
+                continue
+            path = target.split("#", 1)[0]
+            if not path:
+                continue
+            resolved = (md.parent / path).resolve()
+            if not resolved.exists():
+                errors.append(f"{md.relative_to(root)}: dead link -> {target}")
+    return errors
+
+
+def _module_all(path: pathlib.Path) -> List[str]:
+    """The ``__all__`` list literal of a module, without importing it."""
+    tree = ast.parse(path.read_text())
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Assign):
+            targets = [t.id for t in node.targets if isinstance(t, ast.Name)]
+            if "__all__" in targets:
+                return list(ast.literal_eval(node.value))
+    raise ValueError(f"{path}: no __all__ literal found")
+
+
+def _registered_families(path: pathlib.Path) -> List[str]:
+    """Family names from ``@register("name", ...)`` decorators, via AST."""
+    names = []
+    tree = ast.parse(path.read_text())
+    for node in ast.walk(tree):
+        for deco in getattr(node, "decorator_list", []):
+            if (isinstance(deco, ast.Call) and isinstance(deco.func, ast.Name)
+                    and deco.func.id == "register" and deco.args
+                    and isinstance(deco.args[0], ast.Constant)):
+                names.append(deco.args[0].value)
+    return names
+
+
+def _documented(name: str, text: str) -> bool:
+    """A name counts as documented only in code-literal (backticked) position
+    — ``` `build` ``` or ``` `build(spec)` ``` — never as a prose substring
+    ('builds', 'target'), which would satisfy short names vacuously."""
+    return re.search(r"`%s\b" % re.escape(name), text) is not None
+
+
+def check_api_coverage(root: pathlib.Path) -> List[str]:
+    """Every repro.api public symbol + registered family named in docs/api.md."""
+    api_md = root / "docs" / "api.md"
+    if not api_md.exists():
+        return ["docs/api.md is missing"]
+    text = api_md.read_text()
+    errors = []
+    for sym in _module_all(root / API_INIT):
+        if not _documented(sym, text):
+            errors.append(f"docs/api.md: repro.api symbol {sym!r} undocumented")
+    for reg_file in REGISTER_FILES:
+        for fam in _registered_families(root / reg_file):
+            if not _documented(fam, text):
+                errors.append(f"docs/api.md: registered family {fam!r} "
+                              f"({reg_file}) undocumented")
+    return errors
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--root", default=str(pathlib.Path(__file__).parents[1]),
+                    help="repository root (default: this file's grandparent)")
+    args = ap.parse_args(argv)
+    root = pathlib.Path(args.root).resolve()
+    md_files = []
+    for rel in DOC_FILES:
+        p = root / rel
+        if p.exists():
+            md_files.append(p)
+        else:
+            print(f"  missing doc file: {rel}", file=sys.stderr)
+    errors = check_links(root, md_files)
+    errors += check_api_coverage(root)
+    missing = [rel for rel in DOC_FILES if not (root / rel).exists()]
+    errors += [f"missing doc file {rel}" for rel in missing]
+    if errors:
+        print("DOCS GATE FAILED:", file=sys.stderr)
+        for e in errors:
+            print(f"  - {e}", file=sys.stderr)
+        return 1
+    print(f"docs gate passed: {len(md_files)} files, links resolve, "
+          "repro.api and every registered family documented")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
