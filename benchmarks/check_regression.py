@@ -46,6 +46,14 @@ GATES = {
                      "correctness.load_conservation_ok", "families"],
         timings=["total_seconds"],
     ),
+    "BENCH_synthesis.json": dict(
+        correctness=["correctness.cases",
+                     "correctness.lift_meets_lps_target",
+                     "correctness.rewire_no_worse_than_start",
+                     "correctness.synthesized_above_matched_table1",
+                     "families"],
+        timings=["total_seconds"],
+    ),
 }
 
 

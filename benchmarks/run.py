@@ -40,7 +40,7 @@ def _emit_survey_bench(rows, total_us,
 
 def main() -> None:
     from . import collective_model, fault_sweep, fig5, lps_bench, roofline, \
-        routing_eval, table1
+        routing_eval, synthesis_frontier, table1
 
     t0 = time.time()
     rows = _timed("table1_rho2_bw_bounds", table1.run,
@@ -52,6 +52,9 @@ def main() -> None:
     _timed("routing_eval_path_traffic", routing_eval.run,
            lambda rows: "all_diameters_match=%s"
            % all(r["diameter_ok"] is not False for r in rows))
+    _timed("synthesis_frontier_ramanujan_gap", synthesis_frontier.run,
+           lambda rows: "max_gap_fraction=%.3f"
+           % max(r["gap_fraction"] for r in rows))
     _timed("fig5_proportional_bw", fig5.run,
            lambda rows: f"curve_points={len(rows)}")
     _timed("lps_ramanujan_cert", lps_bench.run,

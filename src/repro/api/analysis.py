@@ -114,7 +114,7 @@ class Analysis:
         if self.backend == "dense":
             return float(S.laplacian_spectrum(self.topo)[1])
         return S.rho2_lanczos(self.topo, iters=self.lanczos_iters,
-                              seed=self.seed)
+                              seed=self.seed, matvec=self._matvec())
 
     @cached_property
     def lambda2(self) -> Optional[float]:

@@ -254,6 +254,7 @@ def _ensure_populated() -> None:
     _populated = True
     import repro.core.topologies   # noqa: F401  (registration side effects)
     import repro.core.ramanujan    # noqa: F401
+    import repro.core.synthesis    # noqa: F401  (designed families)
 
 
 def register(name: str, **kwargs: Any) -> Callable:

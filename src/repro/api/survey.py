@@ -206,6 +206,11 @@ def _batch_lanczos_rho2(analyses: Sequence[Analysis]) -> Dict[int, float]:
     for a in analyses:
         if a.backend != "lanczos" or "rho2" in a.__dict__:
             continue
+        # the batched solve uses the plain jnp gather matvec; kernel-routed
+        # analyses must solve per-instance or the flag never exercises the
+        # kernel on grouped (same-shape) surveys
+        if a.use_pallas_kernel:
+            continue
         if a.topo.meta.get("bipartite") or a.radix is None:
             continue
         deg = np.bincount(a.topo.edges.reshape(-1), minlength=a.n)

@@ -110,6 +110,11 @@ def best_random_signing(topo: Topology, trials: int = 64, seed: int = 0,
     return best, signed_spectral_radius(topo, best)
 
 
+#: above this order, ``xpander_like`` switches from the dense per-signing
+#: eigensolve to the batched gather-table search of ``repro.core.synthesis``
+DENSE_LIFT_CUTOFF = 256
+
+
 def xpander_like(seed_topo: Topology, doublings: int, trials: int = 64,
                  seed: int = 0) -> Topology:
     """Xpander-style growth: repeatedly 2-lift with the best random signing.
@@ -117,13 +122,26 @@ def xpander_like(seed_topo: Topology, doublings: int, trials: int = 64,
     Keeps the radix of the seed while doubling nodes each step; the spectral
     gap degrades only by the worst signed radius encountered (tracked in
     meta['lift_lams']).  Signings are selected on the "gap" objective with
-    greedy refinement — the grown graph's rho2 is what Xpander cares about.
+    refinement — the grown graph's rho2 is what Xpander cares about.  Levels
+    at or below ``DENSE_LIFT_CUTOFF`` vertices use the dense float64
+    eigensolve; larger levels run the batched vmapped-Lanczos search of
+    :func:`repro.core.synthesis.best_signing_batched` (same objective, one
+    solve for all candidates), so growth to device-scale n never pays a
+    per-signing dense eigendecomposition.
     """
     g = seed_topo
     lams = []
     for i in range(doublings):
-        s, lam = best_random_signing(g, trials=trials, seed=seed + i,
-                                     objective="gap", refine=True)
+        if g.n <= DENSE_LIFT_CUTOFF:
+            s, lam = best_random_signing(g, trials=trials, seed=seed + i,
+                                         objective="gap", refine=True)
+        else:
+            from .synthesis import best_signing_batched
+
+            # mirrors the dense branch: winner picked on "gap", radius reported
+            s, _top, lam = best_signing_batched(
+                g, batch=min(trials, 32), steps=8 * trials,
+                seed=seed + i, objective="gap")
         lams.append(lam)
         g = two_lift(g, s)
     g.meta["lift_lams"] = lams

@@ -24,7 +24,8 @@ __all__ = [
     "algebraic_connectivity", "spectral_gap", "lambda_nontrivial",
     "fiedler_vector", "table_matvec", "lanczos_tridiag", "lanczos_extremes",
     "lanczos_top_ritz", "rho2_lanczos", "rho2_lanczos_batched",
-    "rho2_laplacian_batched", "fiedler_lanczos", "DENSE_THRESHOLD",
+    "rho2_laplacian_batched", "signed_extremes_batched", "fiedler_lanczos",
+    "DENSE_THRESHOLD",
 ]
 
 #: graphs at or below this order use the dense float64 oracle; larger ones go
@@ -213,17 +214,25 @@ def lanczos_top_ritz(matvec: Callable, n: int, m: int = 200, seed: int = 0,
     return float(w[-1]), ritz
 
 
-def rho2_lanczos(topo: Topology, iters: int = 200, seed: int = 0) -> float:
+def rho2_lanczos(topo: Topology, iters: int = 200, seed: int = 0,
+                 matvec: Optional[Callable] = None) -> float:
     """rho_2 = k - lambda_2 for regular graphs, via ones-deflated Lanczos.
 
     For bipartite graphs the -k eigenpair is also deflated (sign vector from
     the 2-coloring) so the reported lambda_2 is the top *nontrivial* one.
     Note: assumes lambda_2 >= 0 (true for all surveyed topologies; dense path
     covers near-complete graphs where lambda_2 < 0).
+
+    ``matvec``: optional replacement adjacency operator obeying the same
+    padded gather-table contract (e.g. the ``cayley_spmv`` Pallas kernel via
+    ``kernel_matvec``); defaults to the pure-jnp :func:`table_matvec`.
     """
     k = topo.radix
-    tab, w = topo.gather_operands()     # valid for any multigraph (loops folded)
-    mv = table_matvec(tab, w)
+    if matvec is None:
+        tab, w = topo.gather_operands()  # valid for any multigraph (loops folded)
+        mv = table_matvec(tab, w)
+    else:
+        mv = matvec
     defl = [np.ones(topo.n)]
     if topo.meta.get("bipartite"):
         defl.append(_bipartite_sign(topo))
@@ -308,6 +317,24 @@ def _truncate_at_breakdown(alphas: np.ndarray, betas: np.ndarray
     return alphas, betas[:-1]
 
 
+def _batched_ritz_extremes(alphas: jnp.ndarray, betas: jnp.ndarray
+                           ) -> Tuple[np.ndarray, np.ndarray]:
+    """(lambda_min, lambda_max) Ritz values per batch row, each row
+    breakdown-truncated (:func:`_truncate_at_breakdown`) before the tridiag
+    solve.  Shared readout for every batched-Lanczos path so breakdown
+    handling cannot drift between them."""
+    alphas = np.asarray(alphas, dtype=np.float64)
+    betas = np.asarray(betas, dtype=np.float64)
+    B = alphas.shape[0]
+    lmin = np.empty(B, dtype=np.float64)
+    lmax = np.empty(B, dtype=np.float64)
+    for i in range(B):
+        a_i, b_i = _truncate_at_breakdown(alphas[i], betas[i])
+        ev = _tridiag_eigvals(a_i, b_i)
+        lmin[i], lmax[i] = float(ev[0]), float(ev[-1])
+    return lmin, lmax
+
+
 @functools.partial(jax.jit, static_argnames=("m",))
 def _lap_lanczos_batched(tables: jnp.ndarray, weights: jnp.ndarray,
                          degs: jnp.ndarray, v0s: jnp.ndarray, m: int
@@ -363,14 +390,54 @@ def rho2_laplacian_batched(tables: np.ndarray, weights: np.ndarray,
         jnp.asarray(tables, dtype=jnp.int32),
         jnp.asarray(weights, dtype=jnp.float32),
         jnp.asarray(degs, dtype=jnp.float32), v0s, iters)
-    alphas = np.asarray(alphas, dtype=np.float64)
-    betas = np.asarray(betas, dtype=np.float64)
-    out = np.empty(B, dtype=np.float64)
-    for i in range(B):
-        a_i, b_i = _truncate_at_breakdown(alphas[i], betas[i])
-        ev = _tridiag_eigvals(a_i, b_i)
-        out[i] = max(float(ev[0]), 0.0)
-    return out
+    lmin, _ = _batched_ritz_extremes(alphas, betas)
+    return np.maximum(lmin, 0.0)
+
+
+@functools.partial(jax.jit, static_argnames=("m",))
+def _signed_lanczos_batched(table: jnp.ndarray, slot_signs: jnp.ndarray,
+                            v0s: jnp.ndarray, m: int
+                            ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """vmapped Lanczos on B *signed* adjacency operators sharing one table.
+
+    ``table``: (n, k) int32 neighbor table of the base graph, shared across
+    the batch; ``slot_signs``: (B, n, k) float32 per-slot ±1 signs (the
+    signing of edge e written into both of e's table slots); ``v0s``: (B, n)
+    start vectors.  The operator is ``(A_s x)[i] = sum_j s[i,j] x[table[i,j]]``
+    — the Bilu–Linial signed adjacency in the padded gather-table contract.
+    No deflation: a signing destroys the trivial ±k eigenpairs.
+    """
+    def run(sg, v0):
+        def op(x):
+            return jnp.sum(sg * x[table], axis=1)
+
+        alphas, betas, _ = _lanczos_scan(op, v0, m)
+        return alphas, betas
+
+    return jax.vmap(run)(slot_signs, v0s)
+
+
+def signed_extremes_batched(table: np.ndarray, slot_signs: np.ndarray,
+                            iters: int = 90, seed: int = 0
+                            ) -> Tuple[np.ndarray, np.ndarray]:
+    """(lambda_max, lambda_min) of B signed adjacencies in ONE vmapped solve.
+
+    This is the synthesis subsystem's objective oracle: by Bilu–Linial the
+    eigenvalues of the signed adjacency A_s are exactly the NEW eigenvalues a
+    2-lift introduces, so ``lambda_max`` bounds the lift's lambda_2 and
+    ``max(|lambda_min|, lambda_max)`` is the signed spectral radius (the
+    Ramanujan criterion).  Operands follow :func:`_signed_lanczos_batched`;
+    returns float64 arrays (lmax (B,), lmin (B,)), breakdown-truncated so
+    spurious zero Ritz rows never contaminate either end.
+    """
+    slot_signs = np.asarray(slot_signs)
+    B, n, _ = slot_signs.shape
+    v0s = jax.random.normal(jax.random.PRNGKey(seed), (B, n), dtype=jnp.float32)
+    alphas, betas = _signed_lanczos_batched(
+        jnp.asarray(table, dtype=jnp.int32),
+        jnp.asarray(slot_signs, dtype=jnp.float32), v0s, iters)
+    lmin, lmax = _batched_ritz_extremes(alphas, betas)
+    return lmax, lmin
 
 
 def rho2_lanczos_batched(topos: Sequence[Topology], iters: int = 200,

@@ -1,17 +1,24 @@
 """Test-session bootstrap.
 
-``hypothesis`` is a hard dependency of five test modules (see
+``hypothesis`` is a hard dependency of several test modules (see
 requirements.txt).  Hermetic CI containers cannot always pip-install, so when
 the real package is missing we install a minimal deterministic shim that
 supports exactly the strategy surface these tests use (``integers``,
-``sampled_from``, ``booleans``, ``.filter``) and runs each ``@given`` test on
-``max_examples`` pseudo-random draws from a fixed seed.  With real hypothesis
-installed the shim is inert.
+``sampled_from``, ``booleans``, ``floats``, ``just``, ``.filter``/``.map``)
+and runs each ``@given`` test on ``max_examples`` pseudo-random draws from a
+fixed seed.  With real hypothesis installed the shim is inert.
+
+Either way, a deterministic **"ci" profile** is registered and loaded at the
+bottom of this file — fixed seed (``derandomize``), no deadline, and a
+``HYPOTHESIS_MAX_EXAMPLES``-scaled example count — so the shim and real
+hypothesis draw the same role in CI: reproducible runs, no flaky deadline
+kills, tunable cost.  Select another profile with ``HYPOTHESIS_PROFILE``.
 """
 from __future__ import annotations
 
 import functools
 import inspect
+import os
 import random
 import sys
 import types
@@ -52,18 +59,42 @@ def _install_hypothesis_shim() -> None:
     def just(value):
         return _Strategy(lambda rnd: value)
 
-    def settings(max_examples=10, deadline=None, **_):
-        def deco(fn):
-            fn._shim_max_examples = max_examples
+    class settings:
+        """Shim of ``hypothesis.settings``: decorator + profile registry.
+
+        Mirrors the real API surface the suite uses — ``settings(...)`` as a
+        test decorator, ``settings.register_profile(name, **kw)`` and
+        ``settings.load_profile(name)`` — so tests/conftest configure both
+        implementations identically.  The shim is always derandomized (every
+        ``@given`` run draws from ``random.Random(0)``).
+        """
+        _profiles: dict = {"default": {"max_examples": 10}}
+        _current: dict = {"max_examples": 10}
+
+        def __init__(self, max_examples=None, **_ignored):
+            self._max_examples = max_examples
+
+        def __call__(self, fn):
+            if self._max_examples is not None:
+                fn._shim_max_examples = self._max_examples
             return fn
-        return deco
+
+        @classmethod
+        def register_profile(cls, name, **kwargs):
+            cls._profiles[name] = dict(kwargs)
+
+        @classmethod
+        def load_profile(cls, name):
+            cls._current = {**cls._profiles.get("default", {}),
+                            **cls._profiles.get(name, {})}
 
     def given(*strategies, **kw_strategies):
         def deco(fn):
             @functools.wraps(fn)
             def wrapper(*args, **kwargs):
                 rnd = random.Random(0)
-                n = getattr(wrapper, "_shim_max_examples", 10)
+                n = getattr(wrapper, "_shim_max_examples",
+                            settings._current.get("max_examples", 10))
                 for _ in range(n):
                     drawn = tuple(s._draw(rnd) for s in strategies)
                     drawn_kw = {k: s._draw(rnd) for k, s in kw_strategies.items()}
@@ -97,3 +128,26 @@ try:  # pragma: no cover - depends on the environment
     import hypothesis  # noqa: F401
 except ImportError:  # pragma: no cover
     _install_hypothesis_shim()
+    import hypothesis  # noqa: F401
+
+
+def _register_ci_profile() -> None:
+    """One deterministic profile for both implementations (see module doc).
+
+    ``derandomize=True`` fixes the PRNG (the shim is always derandomized);
+    ``deadline=None`` disarms per-example wall-time kills, which misfire on
+    first-call JIT compilation; ``max_examples`` scales with
+    ``HYPOTHESIS_MAX_EXAMPLES`` so CI can trade coverage for wall time.
+    """
+    from hypothesis import settings
+
+    settings.register_profile(
+        "ci",
+        max_examples=int(os.environ.get("HYPOTHESIS_MAX_EXAMPLES", "12")),
+        derandomize=True,
+        deadline=None,
+    )
+    settings.load_profile(os.environ.get("HYPOTHESIS_PROFILE", "ci"))
+
+
+_register_ci_profile()

@@ -136,3 +136,52 @@ def test_default_columns_all_known():
     res = survey(["slimfly(5)"])      # exercises DEFAULT_COLUMNS end to end
     assert res.columns == DEFAULT_COLUMNS
     assert res.rows[0]["rho2"] == pytest.approx(5.0)
+
+
+def test_survey_use_pallas_kernel_matches_default_path():
+    """survey(use_pallas_kernel=True) routes rho2 through the cayley_spmv
+    kernel (interpret mode) and agrees with both the plain-jnp Lanczos path
+    and the dense oracle."""
+    specs = ["petersen", "cycle(12)"]
+    kern = survey(specs, columns=["spec", "backend", "rho2"],
+                  dense_threshold=4, use_pallas_kernel=True)
+    plain = survey(specs, columns=["spec", "backend", "rho2"],
+                   dense_threshold=4)
+    dense = survey(specs, columns=["spec", "rho2"])
+    assert all(r["backend"] == "lanczos" for r in kern.rows)
+    for rk, rp, rd in zip(kern.rows, plain.rows, dense.rows):
+        assert rk["rho2"] == pytest.approx(rp["rho2"], abs=1e-3)
+        assert rk["rho2"] == pytest.approx(rd["rho2"], abs=1e-3)
+
+
+def test_survey_use_pallas_kernel_skips_batched_grouping(monkeypatch):
+    """Same-shape kernel-routed specs must NOT be pre-solved by the plain
+    batched Lanczos grouping — each row's matvec goes through the kernel."""
+    import repro.kernels.cayley_spmv.ops as K
+
+    calls = {"n": 0}
+    real = K.kernel_matvec
+
+    def counting(tab, w):
+        calls["n"] += 1
+        return real(tab, w)
+
+    monkeypatch.setattr(K, "kernel_matvec", counting)
+    specs = ["random_regular(24,4,0)", "random_regular(24,4,1)"]
+    kern = survey(specs, columns=["spec", "backend", "rho2"],
+                  dense_threshold=4, use_pallas_kernel=True)
+    plain = survey(specs, columns=["spec", "backend", "rho2"],
+                   dense_threshold=4)
+    assert calls["n"] >= len(specs)
+    for rk, rp in zip(kern.rows, plain.rows):
+        assert rk["backend"] == "lanczos"
+        assert rk["rho2"] == pytest.approx(rp["rho2"], abs=1e-3)
+
+
+def test_analysis_use_pallas_kernel_rho2_on_loop_graph():
+    """The kernel path must honor the padded gather contract (loop weights)."""
+    g = T.data_vortex(4, 3)
+    a = Analysis(g, dense_threshold=4, use_pallas_kernel=True)
+    assert a.backend == "lanczos"
+    expect = float(S.laplacian_spectrum(g)[1])
+    assert a.rho2 == pytest.approx(expect, abs=2e-3)

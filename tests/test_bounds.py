@@ -121,3 +121,51 @@ def test_tanner_and_alon_milman_isoperimetric_chain():
     assert -1e-9 <= h_lb <= k
     # Alon-Milman: k - lam2 >= h^2/(4+2h^2) with h >= h_lb
     assert k - lam2 >= B.alon_milman_gap_lb(h_lb) - 1e-9
+
+
+# --------------------------------------------------------------------------
+# golden values: Table-1 closed forms pinned to hard-coded paper numbers
+# --------------------------------------------------------------------------
+
+# The 9 bench families (benchmarks/fault_sweep.py SPECS).  These literals are
+# the evaluated analytic expressions of bounds.py at the bench parameters; a
+# regression in any closed form now fails a *named* test here instead of only
+# tripping the bench-regression gate.
+GOLDEN = [
+    ("lps(13,5)", dict(nodes=2184, radix=6, rho2_lb=1.527864045000421)),
+    ("slimfly(13)", dict(nodes=338, radix=19.0, rho2_ub=13.0, bw_ub=1105.0,
+                         diameter=2, rho2_exact=True)),
+    ("torus(16,2)", dict(nodes=256, radix=4, rho2_ub=0.1522409349774265,
+                         bw_ub=32.0, diameter=16, rho2_exact=True)),
+    ("hypercube(8)", dict(nodes=256, radix=8, rho2_ub=2.0, bw_ub=128.0,
+                          diameter=8, rho2_exact=True)),
+    ("ccc(6)", dict(nodes=384, radix=3, rho2_ub=0.17507707522447284,
+                    bw_ub=32.0)),
+    ("butterfly(3,4)", dict(nodes=324, radix=6, rho2_ub=6.0, bw_ub=162.0)),
+    ("petersen_torus(5,4)", dict(nodes=200, radix=4,
+                                 rho2_ub=1.2236067977499789, bw_ub=49.0)),
+    ("dragonfly", dict(nodes=42, radix=6.0, rho2_ub=1.2, bw_ub=21.25)),
+    ("random_regular(256,6,0)", dict(nodes=256, radix=6)),
+]
+
+
+@pytest.mark.parametrize("spec,golden", GOLDEN, ids=[g[0] for g in GOLDEN])
+def test_table1_closed_forms_golden(spec, golden):
+    from repro.api import parse_spec
+
+    fam, bound = parse_spec(spec)
+    forms = fam.forms(*bound[fam.params[0][0]]) if fam.variadic \
+        else fam.forms(**bound)
+    assert forms is not None, f"{spec}: no registered closed forms"
+    assert set(forms) == set(golden), (
+        f"{spec}: closed-form record keys changed: "
+        f"{sorted(forms)} != {sorted(golden)}")
+    for key, want in golden.items():
+        got = forms[key]
+        if isinstance(want, bool):
+            assert got is want, f"{spec}.{key}: {got!r} != {want!r}"
+        elif isinstance(want, float):
+            assert got == pytest.approx(want, abs=1e-9), \
+                f"{spec}.{key}: {got} != {want}"
+        else:
+            assert got == want, f"{spec}.{key}: {got} != {want}"

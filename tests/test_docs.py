@@ -21,11 +21,11 @@ def test_docs_gate_catches_dead_link(tmp_path):
     (tmp_path / "src/repro/api").mkdir(parents=True)
     (tmp_path / "src/repro/core").mkdir(parents=True)
     (tmp_path / "src/repro/api/__init__.py").write_text('__all__ = ["build"]')
-    for f in ("topologies.py", "ramanujan.py"):
+    for f in ("topologies.py", "ramanujan.py", "synthesis.py"):
         (tmp_path / "src/repro/core" / f).write_text("")
     (tmp_path / "docs/api.md").write_text("`build` documented")
     (tmp_path / "README.md").write_text("[gone](docs/missing.md)")
-    for f in ("architecture.md", "theory.md"):
+    for f in ("architecture.md", "theory.md", "synthesis.md"):
         (tmp_path / "docs" / f).write_text("ok")
     proc = subprocess.run(
         [sys.executable, str(ROOT / "tools" / "check_docs.py"),
@@ -41,11 +41,11 @@ def test_docs_gate_catches_undocumented_symbol(tmp_path):
     (tmp_path / "src/repro/core").mkdir(parents=True)
     (tmp_path / "src/repro/api/__init__.py").write_text(
         '__all__ = ["build", "UNHEARD_OF"]')
-    for f in ("topologies.py", "ramanujan.py"):
+    for f in ("topologies.py", "ramanujan.py", "synthesis.py"):
         (tmp_path / "src/repro/core" / f).write_text("")
     (tmp_path / "docs/api.md").write_text("`build` documented")
     (tmp_path / "README.md").write_text("no links")
-    for f in ("architecture.md", "theory.md"):
+    for f in ("architecture.md", "theory.md", "synthesis.md"):
         (tmp_path / "docs" / f).write_text("ok")
     proc = subprocess.run(
         [sys.executable, str(ROOT / "tools" / "check_docs.py"),

@@ -121,6 +121,62 @@ def test_cayley_spmv_with_loops():
     np.testing.assert_allclose(np.asarray(out), dense, atol=1e-3)
 
 
+def _even_regular(n, k, seed):
+    """Random k-regular simple graph, bumping n once if n*k is odd."""
+    from repro.core.topologies import random_regular
+    return random_regular(n if (n * k) % 2 == 0 else n + 1, k, seed=seed)
+
+
+@settings(max_examples=12, deadline=None)
+@given(st.integers(20, 90), st.sampled_from([3, 4, 6]),
+       st.sampled_from([8, 16, 33, 128]),
+       st.sampled_from([jnp.float32, jnp.bfloat16]), st.booleans())
+def test_cayley_spmv_property_vs_ref_and_dense(n, k, block, dtype, with_loops):
+    """Randomized parity: kernel == jnp oracle == dense adjacency matvec over
+    (n, k, block_rows, dtype, loops) — block sizes that do not divide n
+    exercise the ragged (padded) last grid block."""
+    g = _even_regular(n, k, seed=n * 7 + k)
+    tab = g.neighbor_table()
+    rng = np.random.default_rng(n * 13 + block)
+    loops = jnp.asarray(rng.integers(0, 3, size=g.n), dtype) if with_loops \
+        else None
+    x = jax.random.normal(jax.random.PRNGKey(n + block), (g.n,), dtype)
+    out = cayley_spmv(x, jnp.asarray(tab), loops, block_rows=block,
+                      interpret=True)
+    assert out.shape == (g.n,) and out.dtype == dtype
+    ref = spmv_ref(x, jnp.asarray(tab), loops)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32),
+                               atol=TOL[dtype], rtol=TOL[dtype])
+    A = g.adjacency()
+    if with_loops:
+        A[np.arange(g.n), np.arange(g.n)] += np.asarray(loops, np.float64)
+    dense = A @ np.asarray(x, np.float64)
+    tol = 1e-3 if dtype == jnp.float32 else 1e-1
+    np.testing.assert_allclose(np.asarray(out, np.float32), dense,
+                               atol=tol * k, rtol=tol)
+
+
+@settings(max_examples=8, deadline=None)
+@given(st.integers(16, 60), st.sampled_from([3, 5]),
+       st.sampled_from([8, 24]), st.integers(1, 6))
+def test_cayley_spmv_property_padded_gather_operands(n, k, block, drop):
+    """Edge-irregular graphs through gather_operands: the self-index padding
+    + compensating negative loop weights must cancel exactly in the kernel."""
+    g = _even_regular(n, k, seed=n + k)
+    edges = g.edges[: g.m - (drop % g.m)]          # drop edges -> irregular
+    from repro.core.graphs import Topology
+    h = Topology("ragged", g.n, edges)
+    tab, w = h.gather_operands()
+    lw = jnp.asarray(w, jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(n * 3 + drop), (h.n,), jnp.float32)
+    out = cayley_spmv(x, jnp.asarray(tab), lw, block_rows=block, interpret=True)
+    ref = spmv_ref(x, jnp.asarray(tab), lw)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=1e-5)
+    dense = h.adjacency() @ np.asarray(x, np.float64)
+    np.testing.assert_allclose(np.asarray(out), dense, atol=1e-3)
+
+
 def test_lanczos_with_kernel_matvec():
     """End-to-end: Lanczos on the Pallas matvec reproduces rho2 of SlimFly."""
     from repro.core import spectral as S

@@ -64,6 +64,55 @@ def test_k_lift():
     assert lifted.n == 20 and lifted.radix == 3
 
 
+def test_two_lift_preserves_regularity_doubles_counts():
+    """Any signing: 2-lift doubles n and m, keeps every vertex degree."""
+    rng = np.random.default_rng(7)
+    for g in (T.petersen(), T.random_regular(14, 3, seed=1)):
+        s = rng.choice([-1.0, 1.0], size=g.m)
+        lifted = two_lift(g, s)
+        assert lifted.n == 2 * g.n and lifted.m == 2 * g.m
+        assert lifted.is_regular() and lifted.radix == g.radix
+
+
+def test_k_lift_degree_preservation_irregular_base():
+    """k-lift repeats the base degree sequence k times (even when irregular)."""
+    g = T.path(5)                                   # degrees 1,2,2,2,1
+    k = 4
+    lifted = k_lift(g, k, seed=2)
+    assert lifted.n == g.n * k and lifted.m == g.m * k
+    base_deg = g.degrees()
+    lift_deg = lifted.degrees()
+    for v in range(g.n):
+        np.testing.assert_array_equal(lift_deg[v * k:(v + 1) * k],
+                                      np.full(k, base_deg[v]))
+
+
+def test_best_random_signing_deterministic_under_fixed_seed():
+    g = T.random_regular(12, 3, seed=4)
+    for refine in (False, True):
+        s1, lam1 = best_random_signing(g, trials=16, seed=5, refine=refine)
+        s2, lam2 = best_random_signing(g, trials=16, seed=5, refine=refine)
+        np.testing.assert_array_equal(s1, s2)
+        assert lam1 == lam2
+    # distinct seeds explore distinct signings (not a constant function)
+    s3, _ = best_random_signing(g, trials=16, seed=6)
+    s5, _ = best_random_signing(g, trials=16, seed=5)
+    assert not np.array_equal(s3, s5)
+
+
+def test_signed_radius_consistency_with_spectrum():
+    """signed_spectral_radius == max |eig| of the signed adjacency."""
+    g = T.complete(5)
+    rng = np.random.default_rng(0)
+    s = rng.choice([-1.0, 1.0], size=g.m)
+    As = np.zeros((g.n, g.n))
+    for (u, v), sg in zip(g.edges, s):
+        As[u, v] += sg
+        As[v, u] += sg
+    assert signed_spectral_radius(g, s) == pytest.approx(
+        float(np.max(np.abs(np.linalg.eigvalsh(As)))))
+
+
 EP_SCRIPT = r"""
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
