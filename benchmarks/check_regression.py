@@ -1,20 +1,26 @@
 """CI bench-regression gate.
 
-Compares the freshly-emitted ``benchmarks/out/BENCH_survey.json`` and
-``BENCH_faults.json`` against the committed baselines in
-``benchmarks/baselines/`` and exits non-zero on
+Compares the freshly-emitted ``benchmarks/out/BENCH_*.json`` payloads against
+the committed baselines in ``benchmarks/baselines/`` and exits non-zero on
 
 * **wall-time regression** — any gated timing field more than ``--tolerance``
-  (default 20%, env ``BENCH_GATE_TOLERANCE``) above the baseline;
+  (default 20%, env ``BENCH_GATE_TOLERANCE``) above the baseline (timings
+  whose baseline sits under :data:`MIN_GATED_SECONDS` are skipped — at that
+  scale the ratio measures scheduler noise);
 * **correctness drift** — any gated correctness field differing from the
   baseline at all (these are exact: bound checks, case counts, batching
-  invariants).
+  invariants);
+* **acceptance failure** — any ``required_true`` invariant not literally true
+  in the current payload (e.g. the simulator's measured-vs-model bound),
+  regardless of what a regenerated baseline says.
 
 Usage (what the CI bench-gate job runs)::
 
-    PYTHONPATH=src python -m benchmarks.run          # emits both BENCH files
+    PYTHONPATH=src python -m benchmarks.run          # emits the BENCH files
     python benchmarks/check_regression.py
 
+``--only BENCH_routing.json`` (repeatable) gates a subset — the partner of
+``benchmarks.run --only`` for iterating one bench or sharding the CI matrix.
 ``--simulate-slowdown 1.25`` multiplies the current timings before comparing —
 the knob used to demonstrate that the gate actually fails on an injected
 regression.
@@ -27,8 +33,11 @@ import os
 import pathlib
 import sys
 
-#: per-bench gated fields: (correctness fields, timing fields).  Correctness
-#: paths use dotted access into the JSON payload.
+#: per-bench gated fields: correctness fields (dotted access into the JSON
+#: payload; must equal the baseline exactly), timing fields (bounded by
+#: baseline * (1 + tolerance)), and ``required_true`` fields — acceptance
+#: invariants that must be literally true in the CURRENT payload, not merely
+#: unchanged (a baseline regenerated with a broken invariant still fails).
 GATES = {
     "BENCH_survey.json": dict(
         correctness=["all_rho2_bounds_hold", "cases"],
@@ -54,7 +63,34 @@ GATES = {
                      "families"],
         timings=["total_seconds"],
     ),
+    "BENCH_simulate.json": dict(
+        correctness=["correctness.cases",
+                     "correctness.workload_matches_static_ecmp", "families",
+                     "payload_bytes"],
+        # the paper-thesis acceptance pair: every executed ring all-reduce
+        # sits at/above the analytic spectral lower bound, and the executed
+        # uniform-workload throughput rank-orders families exactly as the
+        # spectral gap predicts
+        required_true=["correctness.ring_time_geq_model_lb",
+                       "correctness.thpt_rank_matches_spectral"],
+        timings=["total_seconds"],
+    ),
+    "BENCH_collective_model.json": dict(
+        correctness=["correctness.cases",
+                     "correctness.ramanujan_never_slower_than_torus",
+                     "correctness.max_speedup_vs_torus"],
+        timings=["total_seconds"],
+    ),
+    "BENCH_roofline.json": dict(
+        correctness=["correctness.cases", "correctness.all_fit_16gb"],
+        timings=["total_seconds"],
+    ),
 }
+
+#: timings are not ratio-gated while BOTH baseline and current sit below this
+#: many seconds — at that scale the ratio measures scheduler noise, not the
+#: benchmark; crossing the floor re-enables the comparison
+MIN_GATED_SECONDS = 0.5
 
 
 def _get(payload: dict, dotted: str):
@@ -75,6 +111,10 @@ def check(name: str, baseline: dict, current: dict, tolerance: float,
         if base != cur:
             errors.append(f"{name}: correctness drift in {field!r}: "
                           f"baseline={base!r} current={cur!r}")
+    for field in gate.get("required_true", ()):
+        if _get(current, field) is not True:
+            errors.append(f"{name}: acceptance invariant {field!r} is "
+                          f"{_get(current, field)!r}, must be true")
     # Machine-speed normalization: when both payloads carry the calibration
     # probe (benchmarks/calibrate.py), gate on seconds-per-calibration-unit so
     # a slower/faster runner class doesn't produce phantom verdicts.
@@ -89,6 +129,13 @@ def check(name: str, baseline: dict, current: dict, tolerance: float,
                           f"(baseline={base!r} current={cur!r})")
             continue
         cur = cur * slowdown
+        if base < MIN_GATED_SECONDS and cur < MIN_GATED_SECONDS:
+            # both sides in noise territory; a cheap bench that climbs PAST
+            # the floor still gets compared (and fails) below
+            print(f"  {name}:{field}: baseline {base:.3f}s and current "
+                  f"{cur:.3f}s below the {MIN_GATED_SECONDS}s gating floor "
+                  f"-> SKIPPED")
+            continue
         if normalized:
             base, cur = base / base_cal, cur / cur_cal
         limit = base * (1.0 + tolerance)
@@ -113,9 +160,17 @@ def main(argv=None) -> int:
     ap.add_argument("--simulate-slowdown", type=float, default=1.0,
                     help="multiply current timings (inject a fake regression "
                          "to prove the gate fires)")
+    ap.add_argument("--only", action="append", default=None,
+                    metavar="BENCH_FILE",
+                    help="gate only the named BENCH_*.json (repeatable; "
+                         "default: all gated benches)")
     args = ap.parse_args(argv)
+    names = list(GATES) if args.only is None else args.only
+    unknown = [n for n in names if n not in GATES]
+    if unknown:
+        ap.error(f"unknown bench file(s) {unknown}; known: {list(GATES)}")
     errors = []
-    for name in GATES:
+    for name in names:
         base_p = pathlib.Path(args.baseline_dir) / name
         cur_p = pathlib.Path(args.out_dir) / name
         if not base_p.exists():

@@ -7,7 +7,9 @@ all-gathers, MoE all-to-all).
 """
 from __future__ import annotations
 
+import json
 import pathlib
+import time
 from typing import List
 
 from repro.core import bounds as B
@@ -39,13 +41,26 @@ def make_networks(n: int = 256):
     return [torus, ram, torus3d, ram6]
 
 
-def run(out_csv: str = "benchmarks/out/collective_model.csv") -> List[dict]:
+def run(out_csv: str = "benchmarks/out/collective_model.csv",
+        out_json: str = "benchmarks/out/BENCH_collective_model.json"
+        ) -> List[dict]:
+    from .calibrate import measure_calibration
+
+    calibration = measure_calibration()
+    t_all = time.time()
     rows = []
     nets = make_networks()
+    # the equal-radix claim the table exists to demonstrate: at MATCHED radix
+    # the Ramanujan rewiring is never slower than the torus on any workload
+    # (checked on unrounded seconds: radix-4 ram vs the 2D torus, radix-6 ram
+    # vs the 3D torus)
+    ram_never_slower = True
     for wname, kind, payload in WORKLOADS:
         base = None
+        times = {}
         for net in nets:
             t = net.collective_time(kind, payload)
+            times[net.name] = t
             if base is None:
                 base = t
             rows.append(dict(workload=wname, collective=kind,
@@ -53,11 +68,26 @@ def run(out_csv: str = "benchmarks/out/collective_model.csv") -> List[dict]:
                              bisection_links=round(net.bisection_links, 1),
                              predicted_ms=round(t * 1e3, 4),
                              speedup_vs_torus=round(base / t, 2)))
+        ram_never_slower &= times["ramanujan(k=4)"] <= times["torus(16x16)"] \
+            and times["ramanujan(k=6)"] <= times["torus(8x8x4)3d"]
     p = pathlib.Path(out_csv)
     p.parent.mkdir(parents=True, exist_ok=True)
     cols = list(rows[0])
     p.write_text("\n".join([",".join(cols)] +
                            [",".join(str(r[c]) for c in cols) for r in rows]))
+    payload = dict(
+        bench="collective_model",
+        total_seconds=round(time.time() - t_all, 3),
+        calibration_seconds=round(calibration, 4),
+        correctness=dict(
+            cases=len(rows),
+            ramanujan_never_slower_than_torus=bool(ram_never_slower),
+            max_speedup_vs_torus=round(
+                max(r["speedup_vs_torus"] for r in rows), 2),
+        ),
+        table=rows,
+    )
+    pathlib.Path(out_json).write_text(json.dumps(payload, indent=2))
     return rows
 
 

@@ -7,11 +7,14 @@ from __future__ import annotations
 
 import json
 import pathlib
+import time
 from typing import List
 
 
 def run(dryrun_dir: str = "experiments/dryrun",
-        out_csv: str = "benchmarks/out/roofline.csv") -> List[dict]:
+        out_csv: str = "benchmarks/out/roofline.csv",
+        out_json: str = "benchmarks/out/BENCH_roofline.json") -> List[dict]:
+    t_all = time.time()
     rows = []
     for p in sorted(pathlib.Path(dryrun_dir).glob("*.json")):
         r = json.loads(p.read_text())
@@ -39,6 +42,18 @@ def run(dryrun_dir: str = "experiments/dryrun",
         cols = list(rows[0])
         out.write_text("\n".join([",".join(cols)] +
                                  [",".join(str(r[c]) for c in cols) for r in rows]))
+    # gated even when no dry-run artifacts exist: a cell-count drift (e.g. a
+    # dryrun artifact silently failing to parse) is a correctness signal
+    payload = dict(
+        bench="roofline",
+        total_seconds=round(time.time() - t_all, 3),
+        correctness=dict(
+            cases=len(rows),
+            all_fit_16gb=all(r["fits_16gb"] for r in rows),
+        ),
+        table=rows,
+    )
+    pathlib.Path(out_json).write_text(json.dumps(payload, indent=2))
     return rows
 
 

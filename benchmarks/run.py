@@ -1,15 +1,27 @@
 """Benchmark aggregator. One function per paper table/figure.
 
 Prints ``name,us_per_call,derived`` CSV (scaffold contract); detailed CSVs go
-to benchmarks/out/.  Also emits ``benchmarks/out/BENCH_survey.json`` timing
-the full Table-1 survey (total + per-row), so successive PRs accumulate a
-perf trajectory for the survey engine.
+to benchmarks/out/.  Every gated bench also emits a ``BENCH_*.json`` payload
+(compared against ``benchmarks/baselines/`` by ``check_regression.py``), so
+successive PRs accumulate a perf trajectory per subsystem.
+
+Selectors::
+
+    python -m benchmarks.run                 # full suite
+    python -m benchmarks.run --list          # names only
+    python -m benchmarks.run --only routing_eval --only table1
+
+``--only`` accepts the registry names printed by ``--list`` (repeatable),
+so one bench can be iterated — or one CI matrix entry gated — without paying
+for the rest of the suite.
 """
 from __future__ import annotations
 
+import argparse
 import json
 import pathlib
 import time
+from typing import Callable, Dict, List, Tuple
 
 
 def _timed(name, fn, derive):
@@ -38,32 +50,111 @@ def _emit_survey_bench(rows, total_us,
     p.write_text(json.dumps(payload, indent=2))
 
 
-def main() -> None:
-    from . import collective_model, fault_sweep, fig5, lps_bench, roofline, \
-        routing_eval, synthesis_frontier, table1
+def _run_table1():
+    from . import table1
 
     t0 = time.time()
     rows = _timed("table1_rho2_bw_bounds", table1.run,
-                  lambda rows: f"all_rho2_bounds_hold={all(r['rho2_ok'] for r in rows)}")
+                  lambda rows: f"all_rho2_bounds_hold="
+                               f"{all(r['rho2_ok'] for r in rows)}")
     _emit_survey_bench(rows, (time.time() - t0) * 1e6)
+
+
+def _run_fault_sweep():
+    from . import fault_sweep
+
     _timed("fault_sweep_resilience", fault_sweep.run,
            lambda rows: "min_retention_at_10pct=%.2f"
            % min(r["retention_at_010"] or 0.0 for r in rows))
+
+
+def _run_routing_eval():
+    from . import routing_eval
+
     _timed("routing_eval_path_traffic", routing_eval.run,
            lambda rows: "all_diameters_match=%s"
            % all(r["diameter_ok"] is not False for r in rows))
+
+
+def _run_synthesis_frontier():
+    from . import synthesis_frontier
+
     _timed("synthesis_frontier_ramanujan_gap", synthesis_frontier.run,
            lambda rows: "max_gap_fraction=%.3f"
            % max(r["gap_fraction"] for r in rows))
+
+
+def _run_collective_sim():
+    from . import collective_sim
+
+    _timed("collective_sim_measured_vs_model", collective_sim.run,
+           lambda rows: "all_ring_geq_model=%s"
+           % all(r["ring_geq_model"] for r in rows))
+
+
+def _run_fig5():
+    from . import fig5
+
     _timed("fig5_proportional_bw", fig5.run,
            lambda rows: f"curve_points={len(rows)}")
+
+
+def _run_lps_bench():
+    from . import lps_bench
+
     _timed("lps_ramanujan_cert", lps_bench.run,
            lambda rows: f"all_ramanujan={all(r['ramanujan'] for r in rows)}")
+
+
+def _run_collective_model():
+    from . import collective_model
+
     _timed("collective_model_torus_vs_lps", collective_model.run,
-           lambda rows: "max_speedup=%.1fx" % max(r["speedup_vs_torus"] for r in rows))
+           lambda rows: "max_speedup=%.1fx"
+           % max(r["speedup_vs_torus"] for r in rows))
+
+
+def _run_roofline():
+    from . import roofline
+
     _timed("roofline_dryrun_table", roofline.run,
            lambda rows: f"cells={len(rows)}")
 
 
+#: name -> (runner, BENCH json this bench emits — None for ungated benches).
+#: Declaration order is execution order for the full suite.
+BENCHES: Dict[str, Tuple[Callable[[], None], str]] = {
+    "table1": (_run_table1, "BENCH_survey.json"),
+    "fault_sweep": (_run_fault_sweep, "BENCH_faults.json"),
+    "routing_eval": (_run_routing_eval, "BENCH_routing.json"),
+    "synthesis_frontier": (_run_synthesis_frontier, "BENCH_synthesis.json"),
+    "collective_sim": (_run_collective_sim, "BENCH_simulate.json"),
+    "fig5": (_run_fig5, None),
+    "lps_bench": (_run_lps_bench, None),
+    "collective_model": (_run_collective_model, "BENCH_collective_model.json"),
+    "roofline": (_run_roofline, "BENCH_roofline.json"),
+}
+
+
+def main(argv: List[str] = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--only", action="append", default=None, metavar="NAME",
+                    help="run only the named bench (repeatable; see --list)")
+    ap.add_argument("--list", action="store_true",
+                    help="print bench names (+ emitted BENCH file) and exit")
+    args = ap.parse_args(argv)
+    if args.list:
+        for name, (_, bench_json) in BENCHES.items():
+            print(f"{name}\t{bench_json or '-'}")
+        return 0
+    names = list(BENCHES) if args.only is None else args.only
+    unknown = [n for n in names if n not in BENCHES]
+    if unknown:
+        ap.error(f"unknown bench name(s) {unknown}; known: {list(BENCHES)}")
+    for name in names:
+        BENCHES[name][0]()
+    return 0
+
+
 if __name__ == "__main__":
-    main()
+    raise SystemExit(main())

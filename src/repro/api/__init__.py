@@ -24,7 +24,7 @@ __all__ = [
     "Family", "REGISTRY", "SpecError", "TopologyRegistry", "build",
     "closed_forms", "families", "get", "parse_spec", "register",
     "Analysis", "survey", "SurveyResult", "DEFAULT_COLUMNS", "TABLE1_COLUMNS",
-    "FAULT_COLUMNS", "ROUTING_COLUMNS",
+    "FAULT_COLUMNS", "ROUTING_COLUMNS", "SIM_COLUMNS",
 ]
 
 _LAZY = {
@@ -37,6 +37,7 @@ _LAZY = {
     "RAMANUJAN_COLUMNS": ("repro.api.survey", "RAMANUJAN_COLUMNS"),
     "FAULT_COLUMNS": ("repro.api.survey", "FAULT_COLUMNS"),
     "ROUTING_COLUMNS": ("repro.api.survey", "ROUTING_COLUMNS"),
+    "SIM_COLUMNS": ("repro.api.survey", "SIM_COLUMNS"),
 }
 
 

@@ -22,9 +22,11 @@ from typing import Any, Dict, Optional, Sequence, Union
 import numpy as np
 
 from repro.core import bounds as B
+from repro.core import collectives as C
 from repro.core import faults as F
 from repro.core import properties as P
 from repro.core import routing as R
+from repro.core import simulate as SM
 from repro.core import spectral as S
 from repro.core import traffic as TR
 from repro.core.graphs import Topology
@@ -262,12 +264,99 @@ class Analysis:
                 self.topo, pattern, routing=self.routing(), fiedler=fiedler)
         return cache[pattern]
 
+    # -- executed schedules (link-level simulation) ------------------------
+    def network_model(self) -> "C.NetworkModel":
+        """The analytic (alpha, beta) collective model of this topology
+        (lazy, cached), built from this session's measured rho2 and routing
+        analysis — so its ``validate`` hook ratios the *same* spectral
+        figures :meth:`simulate` executes against.
+
+        Returns:
+            :class:`repro.core.collectives.NetworkModel` with the guaranteed
+            Fiedler bisection, measured diameter, and measured avg hops.
+        """
+        if "_network" not in self.__dict__:
+            self.__dict__["_network"] = C.network_from_topology(
+                self.topo, rho2=self.rho2, routing=self.routing())
+        return self.__dict__["_network"]
+
+    def simulate(self, collective: str = "all_reduce",
+                 algorithm: Optional[str] = None, *,
+                 payload: Union[float, Sequence[float]] = float(1 << 26),
+                 pattern: Optional[str] = None,
+                 link_bw: float = C.LINK_BW,
+                 hop_latency: float = C.PER_HOP_LATENCY,
+                 root: int = 0) -> "SM.SimulationResult":
+        """Execute a collective algorithm or traffic workload on the links
+        (lazy, cached per configuration).
+
+        Lowers the named schedule (:data:`repro.core.simulate.SIM_ALGORITHMS`)
+        onto this topology's gather-table slots — reusing this session's
+        cached :meth:`routing` matrices for the ECMP lowering — and runs the
+        jitted round engine, vmapped over all requested payload sizes.
+
+        Args:
+            collective: ``all_reduce`` / ``reduce_scatter`` / ``all_gather``
+                / ``broadcast``, or ``"traffic"`` to execute a demand-matrix
+                workload instead.
+            algorithm: schedule algorithm (default: the collective's first
+                :data:`~repro.core.simulate.SIM_ALGORITHMS` entry).
+            payload: bytes per node — scalar or sequence (one vmapped engine
+                call sweeps all sizes).
+            pattern: traffic pattern for ``collective="traffic"`` (default
+                ``uniform``; ``adversarial`` reuses the cached Fiedler
+                vector).
+            link_bw / hop_latency: engine constants (defaults match
+                :class:`~repro.core.collectives.NetworkModel`, so
+                ``network_model().validate(...)`` is apples-to-apples).
+            root: broadcast root vertex.
+
+        Returns:
+            :class:`repro.core.simulate.SimulationResult` — measured times
+            (seconds), per-link utilization, congestion accounting.
+        """
+        pay = tuple(np.atleast_1d(np.asarray(payload, dtype=np.float64)))
+        cache = self.__dict__.setdefault("_simulate", {})
+        # resolve defaults BEFORE keying so simulate("all_reduce") and
+        # simulate("all_reduce", "ring") share one cache entry
+        if collective == "traffic":
+            if algorithm not in (None, "ecmp"):
+                raise ValueError("traffic workloads always route via ECMP; "
+                                 f"algorithm={algorithm!r} does not apply")
+            pattern = pattern or "uniform"
+            algorithm = "ecmp"
+        else:
+            if pattern is not None:
+                raise ValueError("pattern= only applies to "
+                                 "collective='traffic'")
+            if collective not in SM.SIM_ALGORITHMS:
+                raise ValueError(f"unknown collective {collective!r} (known: "
+                                 f"{sorted(SM.SIM_ALGORITHMS)} + 'traffic')")
+            algorithm = algorithm or SM.SIM_ALGORITHMS[collective][0]
+        key = (collective, algorithm, pay, pattern, link_bw, hop_latency,
+               root)
+        if key not in cache:
+            if collective == "traffic":
+                fiedler = self.fiedler if pattern == "adversarial" else None
+                cache[key] = SM.simulate_traffic(
+                    self.topo, pattern, payloads=pay, link_bw=link_bw,
+                    hop_latency=hop_latency, routing=self.routing(),
+                    fiedler=fiedler)
+            else:
+                cache[key] = SM.simulate_collective(
+                    self.topo, collective, algorithm, payloads=pay,
+                    link_bw=link_bw, hop_latency=hop_latency,
+                    routing=self.routing(), root=root)
+        return cache[key]
+
     # -- degraded operation (fault tolerance, §3) --------------------------
     def fault_sweep(self, rates: Sequence[float] = (0.02, 0.05, 0.1, 0.2),
                     model: str = "link", samples: int = 32,
                     seed: Optional[int] = None,
                     iters: Optional[int] = None,
-                    routing: bool = False) -> "F.FaultSweepResult":
+                    routing: bool = False,
+                    simulate: bool = False,
+                    sim_payload: float = float(1 << 26)) -> "F.FaultSweepResult":
         """Survival curves under fault injection (rho2, bisection floor,
         connectivity vs fault rate).  Monte-Carlo models batch all ``samples``
         degraded instances per rate into ONE vmapped Laplacian Lanczos solve;
@@ -275,13 +364,18 @@ class Analysis:
         deterministic.  Reuses this session's cached healthy rho2 and (for the
         spectral attack) Fiedler vector.  ``routing=True`` additionally runs
         batched BFS over each rate's stacked degraded tables, appending
-        measured degraded diameter / path-length / reachability per rate."""
+        measured degraded diameter / path-length / reachability per rate.
+        ``simulate=True`` executes a ring all-reduce of ``sim_payload`` bytes
+        on every degraded sample (one vmapped engine call per rate),
+        appending measured degraded collective times
+        (``sim_allreduce_mean/max``, ``sim_dropped_frac_mean``)."""
         fiedler = self.fiedler if model == "attack_spectral" else None
         return F.fault_sweep(
             self.topo, rates=rates, model=model, samples=samples,
             seed=self.seed if seed is None else int(seed),
             iters=min(iters or self.lanczos_iters, max(self.n - 1, 8)),
-            rho2_healthy=self.rho2, fiedler=fiedler, routing=routing)
+            rho2_healthy=self.rho2, fiedler=fiedler, routing=routing,
+            simulate=simulate, sim_payload=sim_payload)
 
     # -- presentation ------------------------------------------------------
     def report(self) -> str:

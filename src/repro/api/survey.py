@@ -25,7 +25,7 @@ from .registry import REGISTRY
 
 __all__ = ["survey", "SurveyResult", "COLUMNS", "DEFAULT_COLUMNS",
            "TABLE1_COLUMNS", "RAMANUJAN_COLUMNS", "FAULT_COLUMNS",
-           "ROUTING_COLUMNS"]
+           "ROUTING_COLUMNS", "SIM_COLUMNS"]
 
 
 def _round(x: float, nd: int = 6) -> float:
@@ -107,6 +107,19 @@ ROUTING_COLUMNS = [
     "diameter_bfs", "diameter_ok", "avg_hops", "path_diversity",
     "traffic_pattern", "max_link_load", "saturation_throughput",
     "throughput_spectral",
+]
+
+#: executed-schedule columns appended when ``survey(simulate=...)``: the
+#: simulated collective/algorithm and round count, measured completion time
+#: vs the NetworkModel analytic lower bound (ms; ``sim_model_ratio`` =
+#: measured/predicted, ``sim_geq_model`` asserts the bound held), peak link
+#: utilization (busy fraction), and the *executed* uniform-workload
+#: saturation throughput (injection units — comparable to the static
+#: ``saturation_throughput`` of :data:`ROUTING_COLUMNS`).
+SIM_COLUMNS = [
+    "sim_collective", "sim_algorithm", "sim_rounds", "sim_time_ms",
+    "model_time_ms", "sim_model_ratio", "sim_geq_model", "sim_util_max",
+    "sim_thpt_uniform",
 ]
 
 
@@ -261,6 +274,46 @@ def _routing_config(routing: Union[bool, Dict[str, Any]]) -> Dict[str, Any]:
     return cfg
 
 
+def _sim_config(simulate: Union[bool, Dict[str, Any]]) -> Dict[str, Any]:
+    cfg = {} if simulate is True else dict(simulate)
+    cfg.setdefault("collective", "all_reduce")
+    cfg.setdefault("algorithm", None)
+    cfg.setdefault("payload", float(1 << 26))
+    cfg.setdefault("pattern", "uniform")   # None skips the workload column
+    if cfg["collective"] == "traffic":
+        # the measured-vs-model columns need a collective the analytic model
+        # predicts; the executed workload already has its own column
+        raise ValueError(
+            "survey(simulate=...): collective='traffic' has no analytic "
+            "prediction to validate against — pick a collective (e.g. "
+            "'all_reduce') and choose the workload via pattern=")
+    return cfg
+
+
+def _sim_values(a: Analysis, cfg: Dict[str, Any]) -> Dict[str, Any]:
+    """Executed-schedule quantities for one survey row (SIM_COLUMNS)."""
+    sim = a.simulate(cfg["collective"], cfg["algorithm"],
+                     payload=cfg["payload"])
+    val = a.network_model().validate(sim)
+    thpt = None
+    if cfg["pattern"]:
+        thpt = a.simulate("traffic", pattern=cfg["pattern"],
+                          payload=cfg["payload"]).saturation_throughput
+    # the largest payload: the same one sim_util_max is accounted at
+    row = val["rows"][int(np.argmax(sim.payload_bytes))]
+    return dict(
+        sim_collective=cfg["collective"],
+        sim_algorithm=sim.algorithm,
+        sim_rounds=sim.rounds,
+        sim_time_ms=_round(row["measured_s"] * 1e3),
+        model_time_ms=_round(row["predicted_s"] * 1e3),
+        sim_model_ratio=_round(row["ratio"], 4),
+        sim_geq_model=val["all_measured_geq_predicted"],
+        sim_util_max=_round(sim.utilization_max, 4),
+        sim_thpt_uniform=None if thpt is None else _round(thpt, 4),
+    )
+
+
 def _routing_values(a: Analysis, cfg: Dict[str, Any]) -> Dict[str, Any]:
     """Measured routing/traffic quantities for one survey row (ROUTING_COLUMNS)."""
     from repro.core.traffic import spectral_throughput_estimate
@@ -290,7 +343,8 @@ def survey(specs: Sequence[Union[str, Topology, Analysis]],
            batch_lanczos: bool = True,
            use_pallas_kernel: bool = False,
            faults: Optional[Union[float, Dict[str, Any]]] = None,
-           routing: Optional[Union[bool, Dict[str, Any]]] = None
+           routing: Optional[Union[bool, Dict[str, Any]]] = None,
+           simulate: Optional[Union[bool, Dict[str, Any]]] = None
            ) -> SurveyResult:
     """Uniform spectral survey over many topologies (the paper's Table 1).
 
@@ -311,9 +365,16 @@ def survey(specs: Sequence[Union[str, Topology, Analysis]],
     all-sources BFS + minimal-path ECMP link loads under one synthetic
     traffic pattern — appending :data:`ROUTING_COLUMNS` to every row
     (diameters/hops in hops, loads in injection units).
+
+    ``simulate``: ``True`` or a config dict (``simulate=dict(collective=
+    "all_reduce", algorithm="ring", payload=1 << 26, pattern="uniform")``)
+    *executes* the collective schedule and the uniform workload on every
+    instance's links, appending :data:`SIM_COLUMNS` — measured completion
+    time next to the NetworkModel lower bound, peak link utilization, and
+    the executed saturation throughput.
     """
     cols = list(columns if columns is not None else DEFAULT_COLUMNS)
-    fault_cfg = routing_cfg = None
+    fault_cfg = routing_cfg = sim_cfg = None
     extra = {"seconds"}
     if faults is not None:
         fault_cfg = _fault_config(faults)
@@ -323,6 +384,10 @@ def survey(specs: Sequence[Union[str, Topology, Analysis]],
         routing_cfg = _routing_config(routing)
         cols += [c for c in ROUTING_COLUMNS if c not in cols]
         extra |= set(ROUTING_COLUMNS)  # only meaningful with routing=...
+    if simulate not in (None, False):  # {} is a valid all-defaults config
+        sim_cfg = _sim_config(simulate)
+        cols += [c for c in SIM_COLUMNS if c not in cols]
+        extra |= set(SIM_COLUMNS)      # only meaningful with simulate=...
     unknown = [c for c in cols if c not in extra and c not in COLUMNS]
     if unknown:
         raise KeyError(f"unknown survey column(s) {unknown}; available: "
@@ -346,6 +411,8 @@ def survey(specs: Sequence[Union[str, Topology, Analysis]],
             row.update(_fault_values(a, fault_cfg))
         if routing_cfg is not None:
             row.update(_routing_values(a, routing_cfg))
+        if sim_cfg is not None:
+            row.update(_sim_values(a, sim_cfg))
         if "seconds" in cols:
             # construction + (amortized) batched solve + lazy evaluation, so
             # the column means what the pre-registry benchmark reported

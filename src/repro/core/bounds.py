@@ -200,7 +200,23 @@ def _torus(k: int, d: int) -> Dict:
                 diameter=d * (k // 2))
 
 
-TABLE1: Dict[str, Callable[..., Dict]] = {
+class _Table1(Dict[str, Callable[..., Dict]]):
+    """Table-1 record lookup that names removed/renamed keys in its KeyError
+    (a plain dict would just echo the missing key)."""
+
+    #: removed key -> its replacement (kept so the error can say *why*)
+    _REMOVED = {"peterson_torus": "petersen_torus"}
+
+    def __missing__(self, key):
+        if key in self._REMOVED:
+            raise KeyError(
+                f"TABLE1 key {key!r} was removed after its deprecation "
+                f"cycle; use {self._REMOVED[key]!r}")
+        raise KeyError(f"unknown TABLE1 topology {key!r} "
+                       f"(known: {', '.join(sorted(self))})")
+
+
+TABLE1: Dict[str, Callable[..., Dict]] = _Table1({
     "butterfly": _butterfly,
     "ccc": _ccc,
     "clex": _clex,
@@ -208,7 +224,6 @@ TABLE1: Dict[str, Callable[..., Dict]] = {
     "dragonfly": _dragonfly,
     "hypercube": _hypercube,
     "petersen_torus": _petersen_torus,
-    "peterson_torus": _petersen_torus,   # deprecated misspelling (kept for compat)
     "slimfly": _slimfly,
     "torus": _torus,
-}
+})

@@ -23,7 +23,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Optional
+from typing import Any, Dict, Optional
 
 from .bounds import expected_degraded_rho2, fiedler_bw_lb, ramanujan_rho2
 from .graphs import Topology
@@ -160,6 +160,16 @@ class NetworkModel:
         return self._bw_time(b * (self.n - 1) / self.n, b) \
             + self._lat(self.diameter + math.log2(max(self.n, 2)))
 
+    def broadcast(self, bytes_total: float) -> float:
+        """Predicted one-to-all broadcast time for B total bytes.  Seconds.
+        The root injects B once over its own links, B crosses every bisection
+        once, and propagation needs at least ecc(root) >= radius >=
+        ceil(diam/2) hops — the model is root-agnostic, so it charges that
+        certified floor (the diameter itself would over-promise for a
+        central root).  A lower bound any executed broadcast tree obeys."""
+        b = bytes_total
+        return self._bw_time(b, b) + self._lat(math.ceil(self.diameter / 2))
+
     def all_to_all(self, bytes_per_node: float) -> float:
         """Predicted all-to-all time for B bytes sent per node (split across
         all peers).  Returns seconds.  Cross-traffic = (n/2 senders x B/2
@@ -181,9 +191,46 @@ class NetworkModel:
             "all-gather": self.all_gather,
             "reduce-scatter": self.reduce_scatter,
             "all-to-all": self.all_to_all,
+            "broadcast": self.broadcast,
             "collective-permute":
                 lambda b: b / self.link_bw + self._lat(self.permute_hops),
         }[kind](bytes_per_node)
+
+    # ---- empirical validation against an executed schedule ----------------
+    def validate(self, sim) -> Dict[str, Any]:
+        """Measured/predicted ratios for an executed schedule — the first
+        empirical check that the spectral (alpha, beta) figures this model
+        certifies are actually attained by a schedule that ran.
+
+        Args:
+            sim: a :class:`repro.core.simulate.SimulationResult` (duck-typed:
+                ``collective``/``algorithm`` names, ``payload_bytes`` and
+                ``time_seconds`` arrays).  The simulation must have run with
+                this model's ``link_bw``/``hop_latency`` for the comparison
+                to be apples-to-apples.
+
+        Returns:
+            dict with ``collective``, ``algorithm``, per-payload ``rows``
+            (``payload_bytes``, ``measured_s``, ``predicted_s``, ``ratio`` =
+            measured/predicted) and ``all_measured_geq_predicted`` — the
+            analytic model is a *lower* bound, so a ratio below 1 - 1e-6
+            means the certificate over-promised (or constants diverged).
+        """
+        kind = str(sim.collective).replace("_", "-")
+        if kind not in COLLECTIVE_FACTORS:
+            raise ValueError(
+                f"cannot validate {sim.collective!r}: the analytic model "
+                f"only predicts {sorted(COLLECTIVE_FACTORS)}")
+        rows = []
+        ok = True
+        for p, t in zip(sim.payload_bytes, sim.time_seconds):
+            pred = self.collective_time(kind, float(p))
+            ratio = float(t) / pred if pred > 0 else float("inf")
+            ok &= float(t) >= pred * (1.0 - 1e-6)
+            rows.append(dict(payload_bytes=float(p), measured_s=float(t),
+                             predicted_s=pred, ratio=ratio))
+        return dict(collective=kind, algorithm=sim.algorithm, rows=rows,
+                    all_measured_geq_predicted=bool(ok))
 
 
 def network_from_topology(topo: Topology, diameter: Optional[int] = None,
@@ -247,5 +294,5 @@ def tpu_v5e_ici(x: int = 16, y: int = 16) -> NetworkModel:
 # traffic factors used by the roofline report (documents the model above)
 COLLECTIVE_FACTORS = {
     "all-reduce": 2.0, "all-gather": 1.0, "reduce-scatter": 1.0,
-    "all-to-all": 1.0, "collective-permute": 1.0,
+    "all-to-all": 1.0, "broadcast": 1.0, "collective-permute": 1.0,
 }

@@ -296,7 +296,9 @@ def fault_sweep(topo: Topology, rates: Sequence[float] = (0.02, 0.05, 0.1, 0.2),
                 iters: int = 160, rho2_healthy: Optional[float] = None,
                 fiedler: Optional[np.ndarray] = None,
                 routing: bool = False,
-                routing_sources: Optional[int] = None) -> FaultSweepResult:
+                routing_sources: Optional[int] = None,
+                simulate: bool = False,
+                sim_payload: float = float(1 << 26)) -> FaultSweepResult:
     """Survival curves under fault injection, batched per rate.
 
     For each rate, ``samples`` Monte-Carlo scenarios (or one, for the
@@ -323,6 +325,16 @@ def fault_sweep(topo: Topology, rates: Sequence[float] = (0.02, 0.05, 0.1, 0.2),
     ``routing_sources`` caps the BFS sources per sample (default: all vertices
     up to n=512, then 64 sampled sources — the knob trades exactness for time
     on large instances).
+
+    ``simulate=True`` *executes* a ring all-reduce of ``sim_payload`` bytes
+    per node on each rate's stacked degraded tables
+    (:func:`repro.core.simulate.stacked_ring_allreduce` — one vmapped
+    schedule compile + engine call for all B samples), appending measured
+    degraded collective times per row: ``sim_allreduce_mean/max`` (seconds;
+    demand between disconnected pairs is dropped) and
+    ``sim_dropped_frac_mean`` (fraction of the ring demand dropped — the
+    disconnection signal).  Memory is O(B n^2 / chunks) for the per-sample
+    BFS matrices, so prefer modest ``samples`` above n ~ 1024.
     """
     if model not in FAULT_MODELS:
         raise ValueError(f"unknown fault model {model!r} (known: {FAULT_MODELS})")
@@ -403,6 +415,12 @@ def fault_sweep(topo: Topology, rates: Sequence[float] = (0.02, 0.05, 0.1, 0.2),
                 np.mean([s["avg_path_length"] for s in stats]))
             row["reachable_frac_mean"] = float(
                 np.mean([s["reachable_frac"] for s in stats]))
+        if simulate:
+            from .simulate import stacked_ring_allreduce
+            sim = stacked_ring_allreduce(tabs, payload=sim_payload)
+            row["sim_allreduce_mean"] = float(sim["time_seconds"].mean())
+            row["sim_allreduce_max"] = float(sim["time_seconds"].max())
+            row["sim_dropped_frac_mean"] = float(sim["dropped_frac"].mean())
         rows.append(row)
     return FaultSweepResult(
         name=topo.name, model=model, n=topo.n, m=topo.m, samples=B_samples,

@@ -14,7 +14,6 @@ from __future__ import annotations
 
 import itertools
 import math
-import warnings
 from typing import Callable, List, Optional, Sequence, Tuple
 
 import numpy as np
@@ -27,7 +26,7 @@ __all__ = [
     "path", "path_looped", "cycle", "complete", "hypercube", "generalized_grid",
     "torus", "butterfly", "data_vortex", "cube_connected", "cube_connected_cycles",
     "clex", "g_connected_h", "dragonfly", "slimfly", "petersen_torus",
-    "peterson_torus", "fat_tree", "random_regular", "petersen",
+    "fat_tree", "random_regular", "petersen",
 ]
 
 
@@ -490,15 +489,13 @@ def slimfly(q: int) -> Topology:
 
 @register("petersen_torus", params=dict(a=int, b=int),
           closed_forms=lambda **p: _T1["petersen_torus"](**p),
-          deprecated_aliases=("peterson_torus",),
           default_instance="petersen_torus(5,4)")
 def petersen_torus(a: int, b: int) -> Topology:
     """Petersen Torus PT(a, b) (Definition 11); 4-regular on 10ab vertices.
 
-    Historically exported as ``peterson_torus`` — the paper's graph is
-    Petersen's, so the correctly-spelled name is canonical and the old one is
-    kept as a deprecated alias (both as a module attribute and in the
-    registry).
+    Historically exported under the ``peterson_torus`` misspelling; that
+    alias went through a deprecation cycle and has been removed (the paper's
+    graph is Petersen's, so only the correctly-spelled name remains).
     """
     if not (a >= 2 and b >= 2 and (a % 2 == 1 or b % 2 == 1)):
         raise ValueError("need a,b >= 2 with at least one odd")
@@ -520,13 +517,6 @@ def petersen_torus(a: int, b: int) -> Topology:
     edges.append(np.stack([vid(xs, ys, 0), vid(xs + a // 2, ys + b // 2, 5)], axis=1))  # diameter
     e = np.concatenate(edges, axis=0)
     return Topology(f"petersen_torus({a},{b})", n, e, meta=dict(a=a, b=b))
-
-
-def peterson_torus(a: int, b: int) -> Topology:
-    """Deprecated misspelling of :func:`petersen_torus`."""
-    warnings.warn("peterson_torus is deprecated; use petersen_torus",
-                  DeprecationWarning, stacklevel=2)
-    return petersen_torus(a, b)
 
 
 @register("fat_tree", params=dict(depth=int, base_mult=int),

@@ -2,8 +2,6 @@
 reports the expected n/radix, and its registered closed-form rho2 matches the
 Analysis measurement on a small instance — the old TABLE1 consistency check,
 now enforced uniformly for all families."""
-import warnings
-
 import numpy as np
 import pytest
 
@@ -89,20 +87,17 @@ def test_registry_defaults():
     assert g2.m == 2 * g.m
 
 
-def test_deprecated_alias_peterson_torus():
-    with warnings.catch_warnings(record=True) as w:
-        warnings.simplefilter("always")
-        g = build("peterson_torus(5,4)")
-    assert any(issubclass(x.category, DeprecationWarning) for x in w)
-    assert g.meta["family"] == "petersen_torus"
-    assert g.n == 200
+def test_removed_alias_peterson_torus():
+    """The misspelled alias finished its deprecation cycle: the registry
+    rejects it (with a did-you-mean hint) and the module attribute is gone."""
+    with pytest.raises(SpecError, match="petersen_torus"):
+        build("peterson_torus(5,4)")
 
     import repro.core.topologies as T
-    with warnings.catch_warnings(record=True) as w:
-        warnings.simplefilter("always")
-        g2 = T.peterson_torus(5, 4)
-    assert any(issubclass(x.category, DeprecationWarning) for x in w)
-    assert g2.n == 200 and g2.name == "petersen_torus(5,4)"
+    assert not hasattr(T, "peterson_torus")
+    assert "peterson_torus" not in T.__all__
+    # the correctly-spelled family still builds
+    assert build("petersen_torus(5,4)").n == 200
 
 
 def test_aliases_resolve():
@@ -131,8 +126,12 @@ def test_registry_absorbs_table1():
             assert reg[key] == pytest.approx(val), (name, key)
 
 
-def test_table1_peterson_key_kept_for_compat():
-    assert B.TABLE1["peterson_torus"] is B.TABLE1["petersen_torus"]
+def test_table1_removed_key_raises_helpful_error():
+    with pytest.raises(KeyError, match="removed.*petersen_torus"):
+        B.TABLE1["peterson_torus"]
+    with pytest.raises(KeyError, match="known:"):
+        B.TABLE1["no_such_family"]
+    assert "peterson_torus" not in B.TABLE1
 
 
 def test_variadic_grid():

@@ -1,0 +1,160 @@
+"""Bench runner selectors + regression-gate semantics (no heavy benches run:
+everything here drives argument handling and gate logic on synthetic
+payloads)."""
+import json
+
+import pytest
+
+import benchmarks.check_regression as CR
+import benchmarks.run as BR
+
+
+# --------------------------------------------------------------------------
+# benchmarks.run --list / --only
+# --------------------------------------------------------------------------
+
+def test_run_list_names_every_bench(capsys):
+    assert BR.main(["--list"]) == 0
+    out = capsys.readouterr().out
+    for name, (_, bench_json) in BR.BENCHES.items():
+        assert name in out
+        if bench_json:
+            assert bench_json in out
+
+
+def test_run_only_rejects_unknown_name():
+    with pytest.raises(SystemExit):
+        BR.main(["--only", "no_such_bench"])
+
+
+def test_run_only_runs_just_the_named_bench(capsys, tmp_path, monkeypatch):
+    monkeypatch.chdir(tmp_path)          # BENCH outputs land in tmp
+    assert BR.main(["--only", "roofline"]) == 0
+    out = capsys.readouterr().out
+    assert "roofline_dryrun_table" in out
+    assert "table1" not in out
+    assert (tmp_path / "benchmarks/out/BENCH_roofline.json").exists()
+
+
+def test_every_gated_bench_json_has_a_gate():
+    emitted = {j for _, j in BR.BENCHES.values() if j}
+    assert emitted == set(CR.GATES)
+
+
+def test_ci_bench_matrix_covers_every_gate():
+    """The sharded bench-gate job always passes --only, so a gated BENCH
+    file missing from every matrix entry would silently never be checked in
+    CI — the union of the matrix selectors must cover GATES, and every bench
+    name the matrix runs must exist."""
+    import pathlib
+    import re
+
+    ci = pathlib.Path(__file__).parents[1] / ".github/workflows/ci.yml"
+    text = ci.read_text()
+    gated = set(re.findall(r"--only (BENCH_\w+\.json)", text))
+    assert gated == set(CR.GATES)
+    run_names = set(re.findall(r"--only (\w+)(?=[\s\"])", text)) - gated
+    assert {n for n in run_names if not n.startswith("BENCH_")} <= \
+        set(BR.BENCHES)
+
+
+def test_collective_model_equal_radix_invariant(tmp_path, monkeypatch):
+    """The gated boolean compares matched-radix pairs on unrounded seconds
+    (radix-4 ramanujan vs the 2D torus, radix-6 vs the 3D torus)."""
+    import benchmarks.collective_model as CM
+
+    monkeypatch.chdir(tmp_path)
+    rows = CM.run()
+    payload = json.loads(
+        (tmp_path / "benchmarks/out/BENCH_collective_model.json").read_text())
+    assert payload["correctness"]["ramanujan_never_slower_than_torus"] is True
+    nets = {r["network"] for r in rows}
+    assert {"torus(16x16)", "ramanujan(k=4)", "torus(8x8x4)3d",
+            "ramanujan(k=6)"} <= nets
+
+
+# --------------------------------------------------------------------------
+# check_regression gate logic
+# --------------------------------------------------------------------------
+
+def _payload(total=2.0, cal=0.1, cases=3, ok=True):
+    return dict(bench="table1_survey", total_seconds=total,
+                calibration_seconds=cal, cases=cases,
+                all_rho2_bounds_hold=ok)
+
+
+def _write(tmp_path, name, baseline, current):
+    (tmp_path / "baselines").mkdir(exist_ok=True)
+    (tmp_path / "out").mkdir(exist_ok=True)
+    (tmp_path / "baselines" / name).write_text(json.dumps(baseline))
+    (tmp_path / "out" / name).write_text(json.dumps(current))
+
+
+def _gate(tmp_path, *extra):
+    return CR.main(["--baseline-dir", str(tmp_path / "baselines"),
+                    "--out-dir", str(tmp_path / "out"),
+                    "--only", "BENCH_survey.json", *extra])
+
+
+def test_gate_passes_on_identical_payloads(tmp_path):
+    _write(tmp_path, "BENCH_survey.json", _payload(), _payload())
+    assert _gate(tmp_path) == 0
+
+
+def test_gate_fails_on_correctness_drift(tmp_path):
+    _write(tmp_path, "BENCH_survey.json", _payload(ok=True),
+           _payload(ok=False))
+    assert _gate(tmp_path) == 1
+
+
+def test_gate_fails_on_injected_slowdown(tmp_path):
+    _write(tmp_path, "BENCH_survey.json", _payload(), _payload())
+    assert _gate(tmp_path, "--simulate-slowdown", "1.5") == 1
+
+
+def test_gate_skips_sub_floor_timings(tmp_path):
+    """A 10x 'regression' on a 5ms bench is scheduler noise, not a verdict."""
+    _write(tmp_path, "BENCH_survey.json", _payload(total=0.005),
+           _payload(total=0.05))
+    assert _gate(tmp_path) == 0
+
+
+def test_gate_catches_sub_floor_bench_climbing_past_the_floor(tmp_path):
+    """The floor is a noise filter, not an exemption: a 5ms bench that now
+    takes 5s must still fail the ratio gate."""
+    _write(tmp_path, "BENCH_survey.json", _payload(total=0.005),
+           _payload(total=5.0))
+    assert _gate(tmp_path) == 1
+
+
+def test_gate_only_rejects_unknown_bench_file(tmp_path):
+    with pytest.raises(SystemExit):
+        CR.main(["--only", "BENCH_nope.json"])
+
+
+def _sim_payload(ring_ok=True, rank_ok=True):
+    return dict(bench="collective_sim", total_seconds=30.0,
+                calibration_seconds=0.1, payload_bytes=2.0 ** 26,
+                families=["a", "b"],
+                correctness=dict(cases=2, ring_time_geq_model_lb=ring_ok,
+                                 thpt_rank_matches_spectral=rank_ok,
+                                 workload_matches_static_ecmp=True))
+
+
+def test_required_true_fails_even_when_baseline_agrees(tmp_path):
+    """The acceptance invariants are gated on literal truth: regenerating a
+    baseline with a broken bound must NOT launder the failure."""
+    _write(tmp_path, "BENCH_simulate.json", _sim_payload(ring_ok=False),
+           _sim_payload(ring_ok=False))
+    rc = CR.main(["--baseline-dir", str(tmp_path / "baselines"),
+                  "--out-dir", str(tmp_path / "out"),
+                  "--only", "BENCH_simulate.json"])
+    assert rc == 1
+
+
+def test_required_true_passes_when_invariants_hold(tmp_path):
+    _write(tmp_path, "BENCH_simulate.json", _sim_payload(), _sim_payload())
+    rc = CR.main(["--baseline-dir", str(tmp_path / "baselines"),
+                  "--out-dir", str(tmp_path / "out"),
+                  "--only", "BENCH_simulate.json"])
+    assert rc == 0

@@ -19,7 +19,7 @@ CASES = [
     ("clex", dict(k=3, ell=3), lambda: T.clex(3, 3), B.TABLE1["clex"](3, 3)),
     ("data_vortex", dict(A=5, C=4), lambda: T.data_vortex(5, 4), B.TABLE1["data_vortex"](5, 4)),
     ("hypercube", dict(d=6), lambda: T.hypercube(6), B.TABLE1["hypercube"](6)),
-    ("peterson_torus", dict(a=5, b=4), lambda: T.peterson_torus(5, 4), B.TABLE1["peterson_torus"](5, 4)),
+    ("petersen_torus", dict(a=5, b=4), lambda: T.petersen_torus(5, 4), B.TABLE1["petersen_torus"](5, 4)),
     ("slimfly", dict(q=5), lambda: T.slimfly(5), B.TABLE1["slimfly"](5)),
     ("torus", dict(k=6, d=2), lambda: T.torus(6, 2), B.TABLE1["torus"](6, 2)),
 ]
@@ -89,7 +89,7 @@ GAP_CASES = [
     ("torus", lambda: T.torus(16, 2)),
     ("ccc", lambda: T.cube_connected_cycles(6)),
     ("data_vortex", lambda: T.data_vortex(16, 5)),
-    ("peterson_torus", lambda: T.peterson_torus(9, 8)),
+    ("petersen_torus", lambda: T.petersen_torus(9, 8)),
     ("butterfly", lambda: T.butterfly(3, 8)),
 ]
 

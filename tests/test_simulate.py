@@ -1,0 +1,368 @@
+"""Link-level simulator: schedule compiler + round engine + API wiring.
+
+Closed-form cross-checks on graphs where the executed schedule's time is
+computable by hand, conservation invariants tying the compiler to the ECMP
+routing layer, consistency of the vmapped fault-stack path with the
+single-topology path, and the measured-vs-model validation contract.
+"""
+import numpy as np
+import pytest
+
+from repro.api import SIM_COLUMNS, Analysis, build, survey
+from repro.core import faults as F
+from repro.core import simulate as SM
+from repro.core import topologies as T
+from repro.core.collectives import (LINK_BW, PER_HOP_LATENCY,
+                                    network_from_topology)
+
+BW, LAT = LINK_BW, PER_HOP_LATENCY
+
+
+def _stack(topo, degraded):
+    width = max(int(np.bincount(topo.edges.reshape(-1),
+                                minlength=topo.n).max()), 1)
+    return F.stacked_operands(degraded, width=width)[0]
+
+
+# --------------------------------------------------------------------------
+# schedule compiler
+# --------------------------------------------------------------------------
+
+def test_ring_allreduce_schedule_shape():
+    g = T.cycle(8)
+    s = SM.compile_schedule(g, "all_reduce", "ring")
+    assert s.unique_rounds == 1            # identical rounds stored once
+    assert s.rounds == 2 * (g.n - 1)
+    assert s.hops.tolist() == [1]          # ring successors are cycle edges
+    assert s.dropped_demand == 0.0
+
+
+@pytest.mark.parametrize("collective,algorithm,phases", [
+    ("all_reduce", "ring", 2), ("reduce_scatter", "ring", 1),
+    ("all_gather", "ring", 1)])
+def test_ring_round_counts_per_collective(collective, algorithm, phases):
+    g = T.torus(4, 2)
+    s = SM.compile_schedule(g, collective, algorithm)
+    assert s.rounds == phases * (g.n - 1)
+
+
+def test_schedule_conservation_matches_ecmp():
+    """Per-round link bytes must conserve flow: sum of slot loads equals the
+    demand-weighted hop count (the routing/traffic invariant, now per round)."""
+    g = T.petersen()
+    a = Analysis(g)
+    r = a.routing()
+    s = SM.compile_schedule(g, "all_reduce", "ring", routing=r)
+    D = SM._logical_rounds_ring(g.n, phases=1)[0][0]
+    hops_weighted = float((D * np.maximum(r.dist, 0)).sum())
+    assert float(s.round_bytes[0].sum()) == pytest.approx(hops_weighted,
+                                                          rel=1e-5)
+
+
+def test_halving_doubling_requires_power_of_two():
+    with pytest.raises(ValueError, match="power-of-two"):
+        SM.compile_schedule(T.cycle(6), "all_reduce", "halving_doubling")
+
+
+def test_unknown_collective_and_algorithm_raise():
+    g = T.cycle(4)
+    with pytest.raises(ValueError, match="unknown collective"):
+        SM.compile_schedule(g, "all_to_all")
+    with pytest.raises(ValueError, match="unknown algorithm"):
+        SM.compile_schedule(g, "all_reduce", "bruck")
+
+
+def test_single_node_rejected_with_clear_error():
+    with pytest.raises(ValueError, match="at least 2 nodes"):
+        SM.simulate_collective(T.path(1), "all_gather", "bruck")
+    with pytest.raises(ValueError, match="at least 2 nodes"):
+        SM.simulate_traffic(T.path(1), "neighbor")
+
+
+def test_total_sent_bytes_match_model_traffic_factors():
+    """Where every transfer is a single physical hop, total link bytes equal
+    the logical volume the (alpha, beta) model charges per node: all-reduce
+    2B(n-1)/n, all-gather B(n-1)/n."""
+    hc = T.hypercube(4)                   # halving/doubling partners adjacent
+    s = SM.compile_schedule(hc, "all_reduce", "halving_doubling")
+    assert s.total_link_bytes().sum() / hc.n == pytest.approx(
+        2.0 * (hc.n - 1) / hc.n, rel=1e-5)
+    kn = T.complete(8)                    # every Bruck partner adjacent
+    s = SM.compile_schedule(kn, "all_gather", "bruck")
+    assert s.total_link_bytes().sum() / kn.n == pytest.approx(
+        (kn.n - 1) / kn.n, rel=1e-5)
+
+
+def test_bfs_tree_broadcast_loads_only_physical_links():
+    g = T.cycle(9)
+    s = SM.compile_schedule(g, "broadcast", "bfs_tree")
+    assert s.hops.max() == 1                      # every transfer is one hop
+    assert s.unique_rounds == 4                   # depth of C9 from the root
+    # round d carries full payload on each parent->child link
+    assert float(s.round_bytes.max()) == pytest.approx(1.0)
+    # 8 tree edges total (spanning tree of 9 vertices)
+    assert float(s.total_link_bytes().sum()) == pytest.approx(8.0)
+
+
+def test_broadcast_root_parameter():
+    g = T.path(5)                                 # path: root matters
+    s0 = SM.compile_schedule(g, "broadcast", "bfs_tree", root=0)
+    s2 = SM.compile_schedule(g, "broadcast", "bfs_tree", root=2)
+    assert s0.unique_rounds == 4 and s2.unique_rounds == 2
+
+
+# --------------------------------------------------------------------------
+# round engine: closed-form cross-checks
+# --------------------------------------------------------------------------
+
+def test_ring_allreduce_on_cycle_closed_form():
+    """On C_n the ring successor IS the physical link: every round moves
+    B/n on each (s, s+1) link, so t = 2(n-1) (B/(n bw) + lat)."""
+    g = T.cycle(8)
+    B_ = float(1 << 24)
+    r = SM.simulate_collective(g, "all_reduce", "ring", payloads=B_)
+    expect = 2 * 7 * (B_ / (8 * BW) + LAT)
+    assert float(r.time_seconds[0]) == pytest.approx(expect, rel=1e-5)
+    # every directed cycle link carries the same bytes: utilization is flat
+    assert r.utilization_max == pytest.approx(r.utilization_mean, rel=1e-5)
+
+
+def test_halving_doubling_on_hypercube_closed_form():
+    """Hypercube partners s^2^i are physical neighbors: round i moves
+    B/2^(i+1) on dimension-i links, twice (halving + doubling)."""
+    d = 4
+    g = T.hypercube(d)
+    B_ = float(1 << 24)
+    r = SM.simulate_collective(g, "all_reduce", "halving_doubling",
+                               payloads=B_)
+    expect = 2 * sum(B_ / (2 ** (i + 1) * BW) + LAT for i in range(d))
+    assert float(r.time_seconds[0]) == pytest.approx(expect, rel=1e-5)
+    assert r.rounds == 2 * d
+
+
+def test_binomial_broadcast_on_complete_closed_form():
+    """On K_n every binomial-tree edge is physical: ceil(log2 n) rounds of
+    the full payload at one hop each."""
+    g = T.complete(8)
+    B_ = float(1 << 22)
+    r = SM.simulate_collective(g, "broadcast", "binomial", payloads=B_)
+    assert float(r.time_seconds[0]) == pytest.approx(3 * (B_ / BW + LAT),
+                                                     rel=1e-5)
+
+
+def test_engine_time_affine_in_payload():
+    """t(B) = alpha + beta*B for a fixed schedule — one vmapped call sweeps
+    the payload axis and the result is exactly affine."""
+    g = T.torus(4, 2)
+    pays = [float(1 << 20), float(1 << 21), float(1 << 22)]
+    r = SM.simulate_collective(g, "all_reduce", "ring", payloads=pays)
+    t = r.time_seconds
+    assert t[0] < t[1] < t[2]
+    d1, d2 = t[1] - t[0], (t[2] - t[1]) / 2.0
+    assert d1 == pytest.approx(d2, rel=1e-3)
+
+
+def test_utilization_accounting():
+    g = T.cycle(6)
+    r = SM.simulate_collective(g, "all_reduce", "ring",
+                               payloads=float(1 << 24))
+    util = r.utilization()
+    assert 0.0 < r.utilization_max <= 1.0 + 1e-6
+    assert util.shape == g.gather_operands()[0].shape
+    hist = r.utilization_histogram(bins=5)
+    # the ring chain loads exactly the n forward-direction slots
+    assert sum(hist["counts"]) == g.n
+    hot = r.hot_links(g.gather_operands()[0], top=3)
+    assert len(hot) == 3 and all(0 <= u < g.n and 0 <= v < g.n
+                                 for u, v, _ in hot)
+
+
+def test_result_summaries_are_json_ready():
+    import json
+
+    r = SM.simulate_collective(T.petersen(), "all_reduce", "ring",
+                               payloads=[float(1 << 20), float(1 << 24)])
+    d = json.loads(json.dumps(r.to_dict()))
+    assert d["collective"] == "all_reduce" and d["rounds"] == r.rounds
+    assert len(d["time_seconds"]) == 2
+    text = r.report()
+    assert "all_reduce/ring" in text and "utilization" in text
+
+
+# --------------------------------------------------------------------------
+# traffic workloads
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("pattern", ["uniform", "adversarial"])
+def test_workload_throughput_matches_static_ecmp(pattern):
+    a = Analysis("petersen_torus(3,3)")
+    sim = a.simulate("traffic", pattern=pattern)
+    static = a.traffic(pattern)
+    assert sim.saturation_throughput == pytest.approx(
+        static.saturation_throughput, rel=1e-4)
+
+
+def test_traffic_sim_rejects_pattern_on_collectives():
+    a = Analysis("cycle(6)")
+    with pytest.raises(ValueError, match="traffic"):
+        a.simulate("all_reduce", pattern="uniform")
+    # ...and the mirror image: a schedule algorithm on a traffic workload
+    with pytest.raises(ValueError, match="ECMP"):
+        a.simulate("traffic", "ring")
+
+
+# --------------------------------------------------------------------------
+# measured vs predicted (the validation loop)
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("spec", ["slimfly(5)", "torus(6,2)", "hypercube(5)",
+                                  "ccc(4)"])
+def test_measured_at_or_above_model_lower_bound(spec):
+    """The paper-thesis check: an executed ring all-reduce can never beat the
+    spectral (alpha, beta) lower bound at the same constants."""
+    a = Analysis(spec)
+    sim = a.simulate("all_reduce", "ring",
+                     payload=[float(1 << 20), float(1 << 26)])
+    val = a.network_model().validate(sim)
+    assert val["all_measured_geq_predicted"]
+    assert all(r["ratio"] >= 1.0 - 1e-6 for r in val["rows"])
+
+
+def test_broadcast_bound_holds_for_central_roots():
+    """The broadcast latency floor must be root-agnostic: a root whose
+    eccentricity is below the diameter still cannot beat ceil(diam/2) hops,
+    so a correct BFS-tree execution is never flagged as a violation."""
+    a = Analysis(T.random_regular(20, 3, seed=0))
+    # latency-dominated payload from a central root (ecc < diameter)
+    sim = a.simulate("broadcast", "bfs_tree", payload=1.0, root=2)
+    val = a.network_model().validate(sim)
+    assert val["all_measured_geq_predicted"]
+
+
+def test_validate_rejects_unknown_collective():
+    a = Analysis("cycle(6)")
+    sim = a.simulate("traffic", pattern="uniform")
+    with pytest.raises(ValueError, match="cannot validate"):
+        a.network_model().validate(sim)
+
+
+def test_validate_flags_an_impossible_measurement():
+    """A measured time below the analytic bound must be flagged, not
+    celebrated."""
+    a = Analysis("cycle(8)")
+    sim = a.simulate("all_reduce", "ring")
+    fake = SM.SimulationResult(**{**sim.__dict__,
+                                  "time_seconds": sim.time_seconds * 1e-6})
+    val = a.network_model().validate(fake)
+    assert not val["all_measured_geq_predicted"]
+
+
+# --------------------------------------------------------------------------
+# fault stacks: vmapped path == per-sample path, composition with faults
+# --------------------------------------------------------------------------
+
+def test_stacked_ring_matches_single_topology_path():
+    g = T.hypercube(5)
+    degraded = [F.apply_faults(g, F.make_scenario(g, "link", 0.1, seed=i))
+                for i in range(4)]
+    tabs = _stack(g, degraded)
+    out = SM.stacked_ring_allreduce(tabs, payload=float(1 << 22))
+    assert out["rounds"] == 2 * (g.n - 1)
+    for i in range(len(degraded)):
+        single = SM.simulate_collective((tabs[i], g.n), "all_reduce", "ring",
+                                        payloads=float(1 << 22))
+        assert float(single.time_seconds[0]) == pytest.approx(
+            float(out["time_seconds"][i]), rel=1e-6)
+
+
+def test_stacked_ring_drops_disconnected_demand():
+    """Cutting both links of one cycle vertex strands it: the ring demand
+    touching it is dropped and reported, and the time stays finite."""
+    g = T.cycle(8)
+    # kill both edges incident to vertex 3, stranding it
+    failed = np.nonzero((g.edges == 3).any(axis=1))[0].astype(np.int64)
+    assert failed.size == 2
+    sc = F.FaultScenario(kind="link", rate=0.25, seed=0, failed_links=failed,
+                         failed_nodes=np.empty(0, dtype=np.int64))
+    tabs = _stack(g, [F.apply_faults(g, sc)])
+    out = SM.stacked_ring_allreduce(tabs, payload=float(1 << 20))
+    assert out["dropped_frac"][0] > 0.0
+    assert np.isfinite(out["time_seconds"]).all()
+
+
+def test_fault_sweep_simulate_appends_measured_times():
+    a = Analysis("hypercube(5)")
+    sweep = a.fault_sweep(rates=[0.0, 0.1], samples=4, simulate=True,
+                          sim_payload=float(1 << 22))
+    r0, r1 = sweep.rows
+    healthy = a.simulate("all_reduce", "ring", payload=float(1 << 22))
+    assert r0["sim_allreduce_mean"] == pytest.approx(
+        float(healthy.time_seconds[0]), rel=1e-5)
+    assert r1["sim_allreduce_max"] >= r1["sim_allreduce_mean"] > 0
+    assert "sim_dropped_frac_mean" in r1
+
+
+# --------------------------------------------------------------------------
+# API wiring: Analysis caching, survey columns, synthesized topologies
+# --------------------------------------------------------------------------
+
+def test_analysis_simulate_caches_per_configuration():
+    a = Analysis("cycle(8)")
+    s1 = a.simulate("all_reduce", payload=float(1 << 20))
+    assert a.simulate("all_reduce", payload=float(1 << 20)) is s1
+    # defaults resolve before keying: explicit 'ring' / 'uniform' hit the
+    # same entries as the implicit defaults
+    assert a.simulate("all_reduce", "ring", payload=float(1 << 20)) is s1
+    t1 = a.simulate("traffic", payload=float(1 << 20))
+    assert a.simulate("traffic", pattern="uniform",
+                      payload=float(1 << 20)) is t1
+    assert a.simulate("all_reduce", payload=float(1 << 21)) is not s1
+    with pytest.raises(ValueError, match="unknown collective"):
+        a.simulate("all_to_all")
+
+
+def test_survey_simulate_rejects_traffic_collective():
+    with pytest.raises(ValueError, match="pattern="):
+        survey(["petersen"], simulate=dict(collective="traffic"))
+
+
+def test_survey_simulate_appends_sim_columns():
+    res = survey(["petersen", "torus(4,2)"], simulate=True)
+    assert all(c in res.columns for c in SIM_COLUMNS)
+    for row in res:
+        assert row["sim_geq_model"] is True
+        assert row["sim_time_ms"] >= row["model_time_ms"]
+        assert row["sim_thpt_uniform"] > 0
+
+
+def test_survey_simulate_config_dict():
+    res = survey(["hypercube(4)"],
+                 simulate=dict(algorithm="halving_doubling",
+                               payload=float(1 << 20), pattern=None))
+    row = res.rows[0]
+    assert row["sim_algorithm"] == "halving_doubling"
+    assert row["sim_thpt_uniform"] is None
+
+
+def test_survey_simulate_payload_sweep_reports_largest():
+    """With a payload sweep, every SIM column describes the LARGEST payload
+    (the one utilization is accounted at), regardless of list order."""
+    pays = [float(1 << 26), float(1 << 20)]
+    row = survey(["petersen"], simulate=dict(payload=pays)).rows[0]
+    a = Analysis("petersen")
+    big = a.network_model().validate(
+        a.simulate("all_reduce", payload=float(1 << 26)))["rows"][0]
+    assert row["sim_time_ms"] == pytest.approx(big["measured_s"] * 1e3)
+
+
+def test_subsystem_composes_with_synthesis_and_faults():
+    """The acceptance run: simulate + fault_sweep(simulate=True) on a
+    synthesized xpander(512,6) registry instance, unchanged."""
+    a = Analysis(build("xpander(512,6,0,40)"))   # small search budget: the
+    assert a.n == 512                            # product is still (512, 6)
+    row = survey([a], simulate=dict(payload=float(1 << 22))).rows[0]
+    assert row["sim_geq_model"] is True
+    sweep = a.fault_sweep(rates=[0.05], samples=2, simulate=True,
+                          sim_payload=float(1 << 22))
+    assert sweep.rows[0]["sim_allreduce_mean"] > 0
+    assert sweep.rows[0]["sim_dropped_frac_mean"] >= 0.0

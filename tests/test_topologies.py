@@ -153,8 +153,8 @@ def test_slimfly(q):
 
 
 @pytest.mark.parametrize("a,b", [(3, 3), (4, 3), (5, 2)])
-def test_peterson_torus(a, b):
-    pt = T.peterson_torus(a, b)
+def test_petersen_torus(a, b):
+    pt = T.petersen_torus(a, b)
     assert pt.n == 10 * a * b and pt.radix == 4
 
 

@@ -29,7 +29,7 @@ from typing import List
 _LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
 
 DOC_FILES = ["README.md", "docs/architecture.md", "docs/theory.md",
-             "docs/api.md", "docs/synthesis.md"]
+             "docs/api.md", "docs/synthesis.md", "docs/simulation.md"]
 API_INIT = "src/repro/api/__init__.py"
 REGISTER_FILES = ["src/repro/core/topologies.py", "src/repro/core/ramanujan.py",
                   "src/repro/core/synthesis.py"]
