@@ -75,6 +75,17 @@ GATES = {
                        "correctness.thpt_rank_matches_spectral"],
         timings=["total_seconds"],
     ),
+    "BENCH_workloads.json": dict(
+        correctness=["correctness.cases", "families", "workloads",
+                     "placement"],
+        # the PR-7 acceptance pair: simulated training-step time rank-orders
+        # the spectral five exactly as rho2 predicts (under uniform-random
+        # placement), and every plan's byte accounting agrees with the
+        # independent launch/hlo_analysis parser
+        required_true=["correctness.step_time_rank_matches_spectral",
+                       "correctness.hlo_crosscheck_ok"],
+        timings=["total_seconds"],
+    ),
     "BENCH_collective_model.json": dict(
         correctness=["correctness.cases",
                      "correctness.ramanujan_never_slower_than_torus",

@@ -92,6 +92,14 @@ def _run_collective_sim():
            % all(r["ring_geq_model"] for r in rows))
 
 
+def _run_workload_sim():
+    from . import workload_sim
+
+    _timed("workload_sim_step_time", workload_sim.run,
+           lambda rows: "max_dropped_frac=%.4f"
+           % max(r["dropped_frac"] for r in rows))
+
+
 def _run_fig5():
     from . import fig5
 
@@ -129,6 +137,7 @@ BENCHES: Dict[str, Tuple[Callable[[], None], str]] = {
     "routing_eval": (_run_routing_eval, "BENCH_routing.json"),
     "synthesis_frontier": (_run_synthesis_frontier, "BENCH_synthesis.json"),
     "collective_sim": (_run_collective_sim, "BENCH_simulate.json"),
+    "workloads": (_run_workload_sim, "BENCH_workloads.json"),
     "fig5": (_run_fig5, None),
     "lps_bench": (_run_lps_bench, None),
     "collective_model": (_run_collective_model, "BENCH_collective_model.json"),

@@ -17,6 +17,14 @@ exact diameter, hop distribution, path diversity) and the ECMP link-load
 accounting of ``--traffic-pattern`` (max link load, saturation throughput) —
 see docs/api.md "Routing & traffic".
 
+``--workload`` appends the executed-training-step block for a workload spec
+(``"kimi_k2_1t@dp=64,tp=8,ep=16"``): the closed-form communication plan and
+its per-phase link times on this topology, beside the Theorem-1/2
+predictions of the main report — see docs/workloads.md.
+
+    PYTHONPATH=src python examples/topology_report.py "slimfly(q=13)" \\
+        --workload "qwen2_7b@dp=16,tp=4" --placement random
+
 There is no per-topology dispatch here: the registry parses the spec, builds
 the instance, and the lazy Analysis session computes (and backend-selects)
 every reported quantity.
@@ -54,6 +62,13 @@ def main():
     ap.add_argument("--traffic-pattern", default="uniform",
                     help="traffic pattern for --routing (uniform, "
                          "bit_complement, transpose, neighbor, adversarial)")
+    ap.add_argument("--workload", default=None, metavar="SPEC",
+                    help='append an executed-training-step block for a '
+                         'workload spec, e.g. "kimi_k2_1t@dp=64,tp=8,ep=16"')
+    ap.add_argument("--placement", default="linear",
+                    choices=["linear", "round_robin", "random"],
+                    help="logical-rank -> physical-node strategy for "
+                         "--workload")
     args = ap.parse_args()
     if args.list or not args.spec:
         print(list_families())
@@ -67,6 +82,11 @@ def main():
         print("--- measured path structure (routing & traffic) ---")
         print(a.routing().report())
         print(a.traffic(args.traffic_pattern).report())
+    if args.workload:
+        print("--- executed training step (workload lowering) ---")
+        res = a.simulate(workload=args.workload, placement=args.placement)
+        print(res.plan.report())
+        print(res.report())
     if args.fault_rate is not None:
         print("--- resilience (degraded operation) ---")
         print(a.fault_sweep(rates=(args.fault_rate,), model=args.fault_model,

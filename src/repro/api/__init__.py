@@ -24,7 +24,8 @@ __all__ = [
     "Family", "REGISTRY", "SpecError", "TopologyRegistry", "build",
     "closed_forms", "families", "get", "parse_spec", "register",
     "Analysis", "survey", "SurveyResult", "DEFAULT_COLUMNS", "TABLE1_COLUMNS",
-    "FAULT_COLUMNS", "ROUTING_COLUMNS", "SIM_COLUMNS",
+    "RAMANUJAN_COLUMNS", "FAULT_COLUMNS", "ROUTING_COLUMNS", "SIM_COLUMNS",
+    "WORKLOAD_COLUMNS",
 ]
 
 _LAZY = {
@@ -38,6 +39,7 @@ _LAZY = {
     "FAULT_COLUMNS": ("repro.api.survey", "FAULT_COLUMNS"),
     "ROUTING_COLUMNS": ("repro.api.survey", "ROUTING_COLUMNS"),
     "SIM_COLUMNS": ("repro.api.survey", "SIM_COLUMNS"),
+    "WORKLOAD_COLUMNS": ("repro.api.survey", "WORKLOAD_COLUMNS"),
 }
 
 

@@ -284,9 +284,11 @@ class Analysis:
                  algorithm: Optional[str] = None, *,
                  payload: Union[float, Sequence[float]] = float(1 << 26),
                  pattern: Optional[str] = None,
+                 workload: Optional[Any] = None,
+                 placement: str = "linear",
                  link_bw: float = C.LINK_BW,
                  hop_latency: float = C.PER_HOP_LATENCY,
-                 root: int = 0) -> "SM.SimulationResult":
+                 root: int = 0) -> Any:
         """Execute a collective algorithm or traffic workload on the links
         (lazy, cached per configuration).
 
@@ -306,6 +308,17 @@ class Analysis:
             pattern: traffic pattern for ``collective="traffic"`` (default
                 ``uniform``; ``adversarial`` reuses the cached Fiedler
                 vector).
+            workload: training-job spec string
+                (``"kimi_k2_1t@dp=64,tp=8,ep=16"``), parsed
+                :class:`~repro.core.workloads.WorkloadSpec`, or prebuilt
+                :class:`~repro.core.workloads.CommPlan`.  When given, the
+                full per-step communication plan is compiled onto this
+                topology (``collective``/``algorithm``/``payload``/``root``
+                do not apply) and a
+                :class:`~repro.core.workloads.WorkloadResult` is returned.
+            placement: logical-rank → physical-node strategy for
+                ``workload=`` (see
+                :func:`repro.core.placement.place_ranks`).
             link_bw / hop_latency: engine constants (defaults match
                 :class:`~repro.core.collectives.NetworkModel`, so
                 ``network_model().validate(...)`` is apples-to-apples).
@@ -313,10 +326,25 @@ class Analysis:
 
         Returns:
             :class:`repro.core.simulate.SimulationResult` — measured times
-            (seconds), per-link utilization, congestion accounting.
+            (seconds), per-link utilization, congestion accounting — or a
+            :class:`repro.core.workloads.WorkloadResult` when ``workload=``
+            is given.
         """
-        pay = tuple(np.atleast_1d(np.asarray(payload, dtype=np.float64)))
         cache = self.__dict__.setdefault("_simulate", {})
+        if workload is not None:
+            from repro.core import workloads as W
+
+            plan = workload if isinstance(workload, W.CommPlan) else \
+                W.plan_workload(workload)
+            key = ("workload", plan.spec.spec, placement, link_bw,
+                   hop_latency)
+            if key not in cache:
+                cache[key] = W.simulate_workload(
+                    self.topo, plan, placement=placement,
+                    routing=self.routing(), link_bw=link_bw,
+                    hop_latency=hop_latency)
+            return cache[key]
+        pay = tuple(np.atleast_1d(np.asarray(payload, dtype=np.float64)))
         # resolve defaults BEFORE keying so simulate("all_reduce") and
         # simulate("all_reduce", "ring") share one cache entry
         if collective == "traffic":
@@ -356,7 +384,9 @@ class Analysis:
                     iters: Optional[int] = None,
                     routing: bool = False,
                     simulate: bool = False,
-                    sim_payload: float = float(1 << 26)) -> "F.FaultSweepResult":
+                    sim_payload: float = float(1 << 26),
+                    workload: Optional[Any] = None,
+                    workload_samples: int = 2) -> "F.FaultSweepResult":
         """Survival curves under fault injection (rho2, bisection floor,
         connectivity vs fault rate).  Monte-Carlo models batch all ``samples``
         degraded instances per rate into ONE vmapped Laplacian Lanczos solve;
@@ -368,14 +398,19 @@ class Analysis:
         ``simulate=True`` executes a ring all-reduce of ``sim_payload`` bytes
         on every degraded sample (one vmapped engine call per rate),
         appending measured degraded collective times
-        (``sim_allreduce_mean/max``, ``sim_dropped_frac_mean``)."""
+        (``sim_allreduce_mean/max``, ``sim_dropped_frac_mean``).
+        ``workload=`` (spec string / :class:`~repro.core.workloads.CommPlan`)
+        executes the full training-step plan on the first
+        ``workload_samples`` degraded samples per rate, appending
+        ``workload_step_mean/max`` and ``workload_dropped_frac_mean``."""
         fiedler = self.fiedler if model == "attack_spectral" else None
         return F.fault_sweep(
             self.topo, rates=rates, model=model, samples=samples,
             seed=self.seed if seed is None else int(seed),
             iters=min(iters or self.lanczos_iters, max(self.n - 1, 8)),
             rho2_healthy=self.rho2, fiedler=fiedler, routing=routing,
-            simulate=simulate, sim_payload=sim_payload)
+            simulate=simulate, sim_payload=sim_payload,
+            workload=workload, workload_samples=workload_samples)
 
     # -- presentation ------------------------------------------------------
     def report(self) -> str:

@@ -3,6 +3,15 @@
 A model is a repeated ``pattern`` of LayerSpecs (scan-over-repeats keeps the
 HLO compact at 48-64 layers); heterogeneous schedules (jamba 1:7, gemma3 5:1)
 are expressed as longer patterns.
+
+Contract consumed by the workload-lowering pass (``repro.core.workloads``):
+``get_config``/``list_configs`` resolve registry names; ``SHAPES`` supplies
+``(seq_len, global_batch, kind)`` per training shape; ``param_count()`` /
+``active_param_count()`` are exact analytic counts (units: parameters, not
+bytes — multiply by the ``param_dtype`` width for bytes); the MoE fields
+(``n_experts``, ``experts_per_token``, ``moe_d_ff``, ``capacity_factor``,
+``moe_dispatch_dtype``) size the expert-parallel all-to-all; ``pattern`` x
+``n_repeats`` determines per-layer collective op counts.
 """
 from __future__ import annotations
 
@@ -105,7 +114,13 @@ class ArchConfig:
         return len(full_attn) == 0 or (len(full_attn) / len(self.pattern)) <= 0.2
 
     def param_count(self) -> int:
-        """Analytic parameter count (embedding + blocks + head)."""
+        """Analytic parameter count (embedding + blocks + head).
+
+        Returns the exact number of scalar parameters (dimensionless count;
+        multiply by the ``param_dtype`` byte width for memory / gradient
+        traffic).  Matches the materialized ``model.param_shapes`` tree leaf
+        by leaf — the workload DP all-reduce sizing depends on this identity.
+        """
         D, V = self.d_model, self.vocab_size
         total = V * D                      # embedding
         if not self.tie_embeddings:
@@ -131,7 +146,13 @@ class ArchConfig:
         return total
 
     def active_param_count(self) -> int:
-        """Params touched per token (MoE: top-k experts only)."""
+        """Params touched per token (MoE: top-k experts only).
+
+        Returns ``param_count()`` with the expert MLPs rescaled from
+        ``n_experts`` to ``experts_per_token`` — the count that enters the
+        ``6 * active_params * tokens`` training-FLOP estimate used by
+        ``repro.core.workloads`` and the roofline model.
+        """
         if self.n_experts == 0:
             return self.param_count()
         dense = self.param_count()
@@ -149,17 +170,25 @@ _REGISTRY: Dict[str, ArchConfig] = {}
 
 
 def register(cfg: ArchConfig) -> ArchConfig:
+    """Add ``cfg`` to the registry under ``cfg.name``; returns it unchanged."""
     _REGISTRY[cfg.name] = cfg
     return cfg
 
 
 def get_config(name: str) -> ArchConfig:
+    """The registered ``ArchConfig`` for an exact registry ``name``.
+
+    Raises ``KeyError`` for unknown names; see ``list_configs()`` for the
+    valid set (workload specs additionally accept unique prefixes, resolved
+    in ``repro.core.workloads`` before calling this).
+    """
     if not _REGISTRY:
         _load_all()
     return _REGISTRY[name]
 
 
 def list_configs():
+    """Sorted list of every registered architecture name (loads on demand)."""
     if not _REGISTRY:
         _load_all()
     return sorted(_REGISTRY)
@@ -177,6 +206,9 @@ def _load_all():
 
 @dataclasses.dataclass(frozen=True)
 class ShapeSpec:
+    """One assigned input shape: ``global_batch`` sequences of ``seq_len``
+    tokens each; ``kind`` gates which passes run it (workload lowering
+    accepts only ``kind == "train"``)."""
     name: str
     seq_len: int
     global_batch: int

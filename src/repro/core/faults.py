@@ -298,7 +298,9 @@ def fault_sweep(topo: Topology, rates: Sequence[float] = (0.02, 0.05, 0.1, 0.2),
                 routing: bool = False,
                 routing_sources: Optional[int] = None,
                 simulate: bool = False,
-                sim_payload: float = float(1 << 26)) -> FaultSweepResult:
+                sim_payload: float = float(1 << 26),
+                workload=None,
+                workload_samples: int = 2) -> FaultSweepResult:
     """Survival curves under fault injection, batched per rate.
 
     For each rate, ``samples`` Monte-Carlo scenarios (or one, for the
@@ -335,6 +337,15 @@ def fault_sweep(topo: Topology, rates: Sequence[float] = (0.02, 0.05, 0.1, 0.2),
     ``sim_dropped_frac_mean`` (fraction of the ring demand dropped — the
     disconnection signal).  Memory is O(B n^2 / chunks) for the per-sample
     BFS matrices, so prefer modest ``samples`` above n ~ 1024.
+
+    ``workload=`` (a spec string, :class:`~repro.core.workloads.WorkloadSpec`
+    or prebuilt :class:`~repro.core.workloads.CommPlan`) *executes* the full
+    per-step training communication plan on the first ``workload_samples``
+    degraded samples of each rate (:func:`repro.core.workloads.
+    simulate_workload`; each sample needs its own all-sources BFS, hence the
+    small default), appending measured degraded step times per row:
+    ``workload_step_mean/max`` (seconds), ``workload_dropped_frac_mean``
+    (fraction of the plan's demand between disconnected node pairs).
     """
     if model not in FAULT_MODELS:
         raise ValueError(f"unknown fault model {model!r} (known: {FAULT_MODELS})")
@@ -345,6 +356,11 @@ def fault_sweep(topo: Topology, rates: Sequence[float] = (0.02, 0.05, 0.1, 0.2),
         fiedler = S.fiedler_vector(topo) if topo.n <= S.DENSE_THRESHOLD \
             else S.fiedler_lanczos(topo)
     B_samples = 1 if model in DETERMINISTIC_MODELS else samples
+    plan = None
+    if workload is not None:
+        from .workloads import CommPlan, plan_workload
+        plan = workload if isinstance(workload, CommPlan) else \
+            plan_workload(workload)
     # impose the healthy table width so link-model rates batch identically
     # (one XLA compilation for the whole sweep; node models still retrace per
     # rate because the surviving n differs)
@@ -421,6 +437,16 @@ def fault_sweep(topo: Topology, rates: Sequence[float] = (0.02, 0.05, 0.1, 0.2),
             row["sim_allreduce_mean"] = float(sim["time_seconds"].mean())
             row["sim_allreduce_max"] = float(sim["time_seconds"].max())
             row["sim_dropped_frac_mean"] = float(sim["dropped_frac"].mean())
+        if plan is not None:
+            from .workloads import simulate_workload
+            wl = [simulate_workload(d, plan)
+                  for d in degraded[:max(1, workload_samples)]]
+            row["workload_step_mean"] = float(
+                np.mean([w.step_seconds for w in wl]))
+            row["workload_step_max"] = float(
+                np.max([w.step_seconds for w in wl]))
+            row["workload_dropped_frac_mean"] = float(
+                np.mean([w.dropped_frac for w in wl]))
         rows.append(row)
     return FaultSweepResult(
         name=topo.name, model=model, n=topo.n, m=topo.m, samples=B_samples,

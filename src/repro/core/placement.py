@@ -21,7 +21,52 @@ from .ramanujan import ramanujan_bound
 from .graphs import Topology
 
 __all__ = ["PlacementGuarantee", "ramanujan_placement_guarantee",
-           "empirical_subset_bw", "min_alpha_for_positive_guarantee"]
+           "empirical_subset_bw", "min_alpha_for_positive_guarantee",
+           "place_ranks"]
+
+
+def place_ranks(n: int, world: int, strategy: str = "linear",
+                seed: int = 0) -> np.ndarray:
+    """Map ``world`` logical job ranks onto ``n`` physical nodes.
+
+    The workload compiler (:mod:`repro.core.workloads`) uses this to pin a
+    training job's rank grid to a topology; traffic between ranks that land
+    on the same node is free.  Ranks are spread as evenly as possible: node
+    loads differ by at most one for every strategy.
+
+    Strategies:
+      * ``"linear"`` — rank ``r`` -> node ``r * n // world``: consecutive
+        ranks stay adjacent in node id, so axis-local groups (TP blocks)
+        co-locate when the job oversubscribes the machine.
+      * ``"round_robin"`` — rank ``r`` -> node ``r % n``: consecutive ranks
+        land on distinct nodes (stripes every group across the machine).
+      * ``"random"`` — the linear assignment pushed through a seeded node
+        permutation: balanced but uniformly scattered, the
+        placement-agnostic setting of the paper's discrepancy argument.
+
+    Args:
+        n: physical node count (>= 1).
+        world: logical rank count (>= 1); may exceed ``n`` (oversubscribed)
+            or be below ``n`` (idle nodes).
+        strategy: one of the three names above.
+        seed: RNG seed for ``"random"``.
+
+    Returns:
+        int array of shape ``(world,)``; entry ``r`` is the node of rank ``r``.
+    """
+    if n < 1 or world < 1:
+        raise ValueError(f"need n >= 1 and world >= 1, got n={n}, "
+                         f"world={world}")
+    ranks = np.arange(world)
+    if strategy == "linear":
+        return (ranks * n) // world
+    if strategy == "round_robin":
+        return ranks % n
+    if strategy == "random":
+        perm = np.random.default_rng(seed).permutation(n)
+        return perm[(ranks * n) // world]
+    raise ValueError(f"unknown placement strategy {strategy!r} "
+                     "(known: linear, round_robin, random)")
 
 
 @dataclasses.dataclass(frozen=True)

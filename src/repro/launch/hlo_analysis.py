@@ -16,6 +16,12 @@ module re-derives the terms from the HLO text directly:
 
 Hardware constants: TPU v5e-class (197 TFLOP/s bf16, 819 GB/s HBM,
 4 ICI links x 50 GB/s per chip).
+
+Besides compiled dry-run artifacts, ``analyze_hlo`` is the independent
+auditor of the workload-lowering pass: ``repro.core.workloads`` re-emits its
+closed-form communication plan as a synthetic HLO module and requires this
+parser's per-kind collective byte totals to match (``hlo_crosscheck``).
+``HW["peak_flops"]`` also sets that subsystem's compute-time denominator.
 """
 from __future__ import annotations
 
@@ -215,6 +221,17 @@ def _dot_flops(inst: Instr, shapes: Dict[str, str]) -> float:
 
 
 def analyze_hlo(text: str) -> HloStats:
+    """Parse one post-partitioning HLO module and total its roofline terms.
+
+    Args:
+      text: HLO text (``module.to_string()`` of a compiled executable, or
+        the synthetic module from ``CommPlan.to_hlo()``).
+
+    Returns an ``HloStats`` with trip-count-scaled per-device totals: FLOPs,
+    fusion-aware HBM bytes, and per-kind collective payload bytes/counts
+    (all-gather counted by gathered OUTPUT bytes, every other collective by
+    operand bytes — the convention the workload cross-check matches).
+    """
     comps, shapes, entry = parse_module(text)
     if entry is None:
         entry = next(iter(comps), None)
@@ -283,6 +300,12 @@ def analyze_hlo(text: str) -> HloStats:
 
 def roofline_terms(flops_per_device: float, bytes_per_device: float,
                    collective_bytes_per_device: float) -> Dict[str, float]:
+    """Per-device roofline times (seconds) and the dominant term.
+
+    Inputs are per-device totals for one step; returns ``compute_s`` /
+    ``memory_s`` / ``collective_s`` at the ``HW`` constants plus
+    ``dominant``, the largest of the three.
+    """
     t_compute = flops_per_device / HW["peak_flops"]
     t_memory = bytes_per_device / HW["hbm_bw"]
     t_coll = collective_bytes_per_device / (HW["n_links"] * HW["link_bw"])

@@ -24,6 +24,13 @@ __all__ = ["moe_params_shapes", "moe_forward", "moe_ref", "capacity"]
 
 
 def capacity(tokens_per_group: int, n_experts: int, k: int, cf: float) -> int:
+    """Per-expert slot count C for one routing group.
+
+    ``ceil(tokens * k / n_experts * cf)``, floored at 1 — the padded slot
+    tensor is ``(n_experts, C, d_model)`` regardless of actual routing, which
+    is why capacity (not routed-token counts) sizes the EP all-to-all in both
+    ``parallel.ep_moe`` and the ``repro.core.workloads`` plan.
+    """
     return max(1, math.ceil(tokens_per_group * k / n_experts * cf))
 
 

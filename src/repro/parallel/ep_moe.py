@@ -15,6 +15,13 @@ Layout (per (data d, model m) shard):
 
 Forward-only building block (the full train-graph integration with custom
 VJP is the roadmap item; this validates the exchange pattern and its cost).
+
+Exchange-shape contract (what ``repro.core.workloads`` sizes its MoE
+all-to-all phases from): each dispatch moves a padded ``(E, C, D/tp)`` slot
+tensor per token group, ``C = capacity(S, E, k, capacity_factor)`` from
+``repro.models.moe`` — capacity padding travels even when slots are empty.
+Dispatch payload dtype is ``cfg.moe_dispatch_dtype``; the forward return and
+both backward legs move the same shape in the compute dtype.
 """
 from __future__ import annotations
 
@@ -56,10 +63,19 @@ def _route_local(x, router_w, k: int, C: int, E: int):
 
 def ep_moe_forward(mesh: Mesh, params: Dict, x: jnp.ndarray, cfg
                    ) -> jnp.ndarray:
-    """x: (G, S, D) sharded on 'data'; expert weights sharded on 'model'.
+    """Explicit-EP MoE forward over a ('data','model') mesh.
 
-    Returns y (G, S, D) sharded on 'data'.  All cross-device traffic is two
-    explicit all_to_all calls of exactly (E*C*D / model) payload per shard.
+    Args:
+      mesh: mesh whose 'model' axis hosts the experts (E % model_size == 0).
+      params: dict with ``router (D,E)`` and ``wg/wu/wd (E,D,F)`` leaves,
+        'model'-sharded on the expert axis.
+      x: token groups ``(G, S, D)`` sharded on 'data'.
+      cfg: ``ArchConfig`` — reads n_experts, experts_per_token, d_model,
+        capacity_factor, mlp_act.
+
+    Returns y ``(G, S, D)`` sharded on 'data'.  All cross-device traffic is
+    two explicit all_to_all calls of exactly (E*C*D / model) payload per
+    shard — the per-op volume the workload plan's moe phases reproduce.
     """
     E, k, D = cfg.n_experts, cfg.experts_per_token, cfg.d_model
     M = mesh.shape["model"]

@@ -11,6 +11,15 @@ Policy (baseline, see EXPERIMENTS.md §Perf for the hillclimbed variants):
                       GSPMD inserts the per-layer all-gathers)
   * long-context decode (batch < data axis) -> KV-cache sequence dim on 'data'
     (sequence parallelism for the cache)
+
+``param_pspecs`` is the single source of truth for which parameter axes are
+``'model'``-sharded: besides the GSPMD launch path, the workload-lowering
+pass (``repro.core.workloads``) consults it to divide each parameter's
+gradient bytes by its tensor-parallel shard factor and to count the
+``'model'``-sharded matmul pairs that emit TP collectives.  That consumer
+passes a duck-typed mesh — only ``mesh.axis_names`` and ``mesh.shape``
+(a name -> size mapping) are read by the rule functions; no devices are
+required to evaluate the rules.
 """
 from __future__ import annotations
 
@@ -94,6 +103,18 @@ def _param_rule(name: str, shape: Tuple[int, ...], cfg: ArchConfig, mesh: Mesh,
 
 
 def param_pspecs(cfg: ArchConfig, mesh: Mesh) -> Dict[str, Any]:
+    """PartitionSpec tree matching ``models.model.param_shapes(cfg)``.
+
+    Args:
+      cfg: the architecture; expert/TP divisibility guards read its widths.
+      mesh: a ``jax.sharding.Mesh`` — or any object with ``.axis_names`` and
+        ``.shape`` (name -> size), which is all the rules consult.
+
+    Returns a tree with the same structure as ``param_shapes(cfg)`` whose
+    leaves are ``PartitionSpec``s; zip-walking the two trees pairs every
+    parameter shape with its spec (how ``repro.core.workloads`` derives
+    per-parameter shard factors).
+    """
     shapes = M.param_shapes(cfg)
 
     def walk(tree, name=""):

@@ -1,0 +1,299 @@
+"""Closed-form pins of the workload-lowering pass (repro.core.workloads).
+
+Every byte count in a :class:`CommPlan` is closed-form, so these tests pin
+them against independently computed figures from the model configs and the
+sharding rules: DP all-reduce bytes equal parameter bytes at ``tp=1``, TP
+collective ops move exactly ``tokens_per_rank * d_model`` activations, and
+the MoE all-to-all demand matrix carries the padded-slot-tensor invariant
+(row sums = ``bytes_per_rank * (ep-1)/ep``).  Parsing round-trips, the HLO
+byte audit, placement strategies, and the Analysis/survey/fault_sweep wiring
+are covered alongside.
+"""
+import numpy as np
+import pytest
+
+from repro.api import Analysis, WORKLOAD_COLUMNS, build, survey
+from repro.configs.base import SHAPES, get_config
+from repro.core import workloads as W
+from repro.core.placement import place_ranks
+from repro.models.moe import capacity
+
+DENSE = "qwen2_7b"          # prefix of qwen2-7b (dense, 28 attn+mlp layers)
+MOE = "grok_1_314b"         # prefix of grok-1-314b (8 experts, all-MoE)
+
+
+# --------------------------------------------------------------------------
+# spec parsing
+# --------------------------------------------------------------------------
+
+def test_parse_resolves_prefix_and_round_trips():
+    ws = W.parse_workload(f"{MOE}@dp=8,tp=2,ep=4")
+    assert ws.arch == "grok-1-314b"          # unique-prefix resolution
+    assert (ws.dp, ws.tp, ws.ep) == (8, 2, 4)
+    assert ws.world == 16
+    assert W.parse_workload(ws.spec) == ws   # canonical string round-trips
+    # passing a WorkloadSpec through is the identity
+    assert W.parse_workload(ws) is ws
+
+
+def test_parse_defaults_and_shape_key():
+    ws = W.parse_workload(DENSE)
+    assert (ws.dp, ws.tp, ws.ep, ws.shape) == (1, 1, 1, "train_4k")
+    assert "shape=" not in ws.spec           # default shape omitted
+    ws2 = W.parse_workload(f"{DENSE}@dp=2,shape=train_4k")
+    assert ws2.shape == "train_4k"
+
+
+@pytest.mark.parametrize("bad", [
+    "no_such_model@dp=2",                    # unknown model
+    "qwen2@dp=2",                            # ambiguous: qwen2-7b / qwen2-vl-7b
+    f"{DENSE}@zz=3",                         # unknown key
+    f"{DENSE}@dp",                           # missing =value
+    f"{DENSE}@dp=x",                         # non-integer
+    f"{DENSE}@dp=0",                         # < 1
+    f"{DENSE}@dp=7",                         # 7 does not divide global_batch 256
+    f"{DENSE}@dp=4,ep=2",                    # dense arch cannot take ep > 1
+    f"{MOE}@dp=4,ep=8",                      # ep must divide dp
+    f"{MOE}@dp=6,ep=3",                      # ep must divide n_experts (8)
+    f"{DENSE}@shape=decode_32k",             # non-train shape
+    f"{DENSE}@shape=nope",                   # unknown shape
+])
+def test_parse_rejects_invalid_specs(bad):
+    with pytest.raises(W.WorkloadSpecError):
+        W.parse_workload(bad)
+    # WorkloadSpecError is a ValueError, so generic handlers still catch it
+    with pytest.raises(ValueError):
+        W.parse_workload(bad)
+
+
+# --------------------------------------------------------------------------
+# closed-form byte pins
+# --------------------------------------------------------------------------
+
+def test_dp_allreduce_bytes_equal_param_bytes_at_tp1():
+    """With no tensor parallelism every gradient element is all-reduced, so
+    the DP phase total must equal the parameter bytes exactly — and both must
+    match the analytic ``param_count`` at the param dtype width."""
+    plan = W.plan_workload(f"{DENSE}@dp=8")
+    cfg = get_config(plan.spec.arch)
+    assert plan.param_bytes == cfg.param_count() * 2          # bf16 params
+    assert plan.grad_bytes_per_rank == pytest.approx(plan.param_bytes)
+    ar = plan.phase("dp_allreduce")
+    assert ar.total_bytes == pytest.approx(plan.grad_bytes_per_rank)
+    assert ar.ops_per_step == int(np.ceil(plan.param_bytes / W.BUCKET_BYTES))
+    assert ar.bytes_per_rank <= W.BUCKET_BYTES
+
+
+def test_tp_shard_factor_shrinks_dp_bytes():
+    """tp=2 halves every 'model'-sharded gradient; the DP total must drop
+    strictly below the parameter bytes but stay above bytes/tp (norms and
+    the router stay replicated)."""
+    p1 = W.plan_workload(f"{DENSE}@dp=8")
+    p2 = W.plan_workload(f"{DENSE}@dp=8,tp=2")
+    assert p2.grad_bytes_per_rank < p1.grad_bytes_per_rank
+    assert p2.grad_bytes_per_rank > p1.grad_bytes_per_rank / 2
+
+
+def test_tp_phase_moves_full_activation_per_op():
+    plan = W.plan_workload(f"{DENSE}@dp=4,tp=2")
+    cfg = get_config(plan.spec.arch)
+    shape = SHAPES["train_4k"]
+    tokens_rank = shape.global_batch * shape.seq_len // 4
+    assert plan.tokens_per_rank == tokens_rank
+    ag = plan.phase("tp_allgather")
+    rs = plan.phase("tp_reducescatter")
+    # each op carries the full tokens x d_model activation in compute dtype
+    assert ag.bytes_per_rank == tokens_rank * cfg.d_model * 2
+    assert rs.bytes_per_rank == ag.bytes_per_rank
+    # attn (wq/wo) + dense mlp (wg/wd) = 2 sharded pairs per layer, fwd+bwd
+    assert ag.ops_per_step == 2 * (2 * cfg.n_layers)
+    assert rs.ops_per_step == ag.ops_per_step
+
+
+def test_moe_phase_matches_padded_slot_tensor():
+    plan = W.plan_workload(f"{MOE}@dp=8,ep=4")
+    cfg = get_config(plan.spec.arch)
+    shape = SHAPES["train_4k"]
+    E, k = cfg.n_experts, cfg.experts_per_token
+    C = capacity(shape.seq_len, E, k, cfg.capacity_factor)
+    groups_per_rank = shape.global_batch // 8
+    slot_elems = groups_per_rank * E * C * cfg.d_model
+    disp = plan.phase("moe_dispatch")
+    comb = plan.phase("moe_combine")
+    disp_width = W._DTYPE_BYTES[cfg.moe_dispatch_dtype]
+    assert disp.bytes_per_rank == slot_elems * disp_width
+    assert comb.bytes_per_rank == slot_elems * 2      # bf16 return legs
+    moe_layers = sum(1 for s in cfg.pattern if s.moe) * cfg.n_repeats
+    assert disp.ops_per_step == moe_layers
+    assert comb.ops_per_step == 3 * moe_layers        # fwd return + 2 bwd legs
+
+
+def test_dense_plan_has_no_moe_phase_and_dp1_no_allreduce():
+    plan = W.plan_workload(f"{DENSE}@tp=2")
+    names = [p.name for p in plan.phases]
+    assert "dp_allreduce" not in names                # dp=1: nothing to reduce
+    assert "moe_dispatch" not in names
+    with pytest.raises(KeyError):
+        plan.phase("moe_dispatch")
+
+
+# --------------------------------------------------------------------------
+# logical demand invariants
+# --------------------------------------------------------------------------
+
+def test_all_to_all_demand_row_sums_are_routed_fraction():
+    """Each rank keeps 1/ep of its slot tensor local; the off-diagonal demand
+    row must sum to exactly bytes_per_rank * (ep-1)/ep."""
+    plan = W.plan_workload(f"{MOE}@dp=8,ep=4")
+    phase = plan.phase("moe_dispatch")
+    groups = W._phase_groups(plan, "ep")
+    assert len(groups) == 2                           # (dp/ep) * tp groups
+    node_of = np.arange(plan.world)                   # identity placement
+    D, rounds = W._phase_demand(phase, groups, node_of, plan.world)
+    want = phase.bytes_per_rank * (4 - 1) / 4
+    np.testing.assert_allclose(D.sum(axis=1), want, rtol=1e-12)
+    assert rounds == phase.ops_per_step               # a2a: one round per op
+
+
+def test_ring_demand_rounds_and_per_edge_payload():
+    plan = W.plan_workload(f"{DENSE}@dp=4,tp=2")
+    ar = plan.phase("dp_allreduce")
+    groups = W._phase_groups(plan, "dp")
+    node_of = np.arange(plan.world)
+    D, rounds = W._phase_demand(ar, groups, node_of, plan.world)
+    # ring all-reduce: 2(g-1) rounds of 1/g payload along each group edge
+    assert rounds == 2 * (4 - 1) * ar.ops_per_step
+    np.testing.assert_allclose(D.sum(axis=1), ar.bytes_per_rank / 4,
+                               rtol=1e-12)
+    # DP groups stride by tp, so rank r talks to r +- tp, never r +- 1
+    assert D[0, 1] == 0.0 and D[0, 2] > 0.0
+
+
+def test_colocated_ranks_communicate_for_free():
+    """Oversubscription folds whole TP groups onto one node under linear
+    placement; their demand lands on the (zeroed) diagonal."""
+    plan = W.plan_workload(f"{DENSE}@dp=4,tp=2")     # world 8
+    node_of = place_ranks(4, plan.world, strategy="linear")   # 2 ranks/node
+    tp = plan.phase("tp_allgather")
+    D, _ = W._phase_demand(tp, W._phase_groups(plan, "tp"), node_of, 4)
+    assert D.sum() == 0.0                             # every TP pair co-located
+
+
+# --------------------------------------------------------------------------
+# HLO byte audit
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("spec", [f"{DENSE}@dp=8,tp=2", f"{MOE}@dp=8,ep=4"])
+def test_hlo_crosscheck_agrees(spec):
+    check = W.hlo_crosscheck(spec)
+    assert check["ok"], check
+    kinds = check["kinds"]
+    plan = W.plan_workload(spec)
+    assert set(kinds) == set(plan.collective_byte_totals())
+    for row in kinds.values():
+        assert row["plan_bytes"] > 0
+
+
+# --------------------------------------------------------------------------
+# rank placement
+# --------------------------------------------------------------------------
+
+def test_place_ranks_strategies_and_balance():
+    n, world = 8, 20
+    for strategy in ("linear", "round_robin", "random"):
+        nodes = place_ranks(n, world, strategy=strategy, seed=3)
+        assert nodes.shape == (world,)
+        loads = np.bincount(nodes, minlength=n)
+        assert loads.max() - loads.min() <= 1         # balanced
+    assert np.array_equal(place_ranks(n, world, strategy="round_robin"),
+                          np.arange(world) % n)
+    # random is a seeded relabeling: deterministic per seed, differs by seed
+    r0 = place_ranks(n, world, strategy="random", seed=0)
+    assert np.array_equal(r0, place_ranks(n, world, strategy="random", seed=0))
+    assert any(not np.array_equal(r0, place_ranks(n, world, strategy="random",
+                                                  seed=s)) for s in (1, 2, 3))
+
+
+def test_place_ranks_rejects_bad_arguments():
+    with pytest.raises(ValueError):
+        place_ranks(0, 4)
+    with pytest.raises(ValueError):
+        place_ranks(4, 0)
+    with pytest.raises(ValueError):
+        place_ranks(4, 8, strategy="nope")
+
+
+# --------------------------------------------------------------------------
+# execution + API wiring
+# --------------------------------------------------------------------------
+
+def test_simulate_workload_composition():
+    topo = build("hypercube(3)")                      # n = 8 = world
+    res = W.simulate_workload(topo, f"{DENSE}@dp=4,tp=2", placement="random",
+                              seed=1)
+    assert res.n == 8 and res.plan.world == 8
+    # step composition: compute + tp + moe + exposed dp, all non-negative
+    want = (res.compute_seconds + res.tp_seconds + res.moe_seconds
+            + res.exposed_dp_seconds)
+    assert res.step_seconds == pytest.approx(want)
+    assert res.exposed_dp_seconds <= res.dp_seconds
+    assert 0.0 <= res.exposed_comm_fraction < 1.0
+    assert res.dropped_frac == 0.0                    # hypercube is connected
+    assert set(res.phase_seconds()) == {p.name for p in res.plan.phases}
+    d = res.to_dict()
+    assert d["step_ms"] == pytest.approx(res.step_seconds * 1e3, rel=1e-6)
+    assert "step time" in res.report() and plan_text_ok(res.plan.report())
+
+
+def plan_text_ok(text: str) -> bool:
+    return "workload" in text and "compute/rank" in text
+
+
+def test_analysis_simulate_workload_caches():
+    a = Analysis("hypercube(3)")
+    r1 = a.simulate(workload=f"{DENSE}@dp=4,tp=2", placement="linear")
+    r2 = a.simulate(workload=f"{DENSE}@dp=4,tp=2", placement="linear")
+    assert r1 is r2                                   # memoized per (spec, ...)
+    r3 = a.simulate(workload=f"{DENSE}@dp=4,tp=2", placement="round_robin")
+    assert r3 is not r1
+
+
+def test_survey_appends_workload_columns():
+    sr = survey(["hypercube(3)"], columns=["spec", "nodes", "rho2"],
+                workload=f"{DENSE}@dp=4,tp=2")
+    row = sr.rows[0]
+    for col in WORKLOAD_COLUMNS:
+        assert col in row, col
+    assert row["workload"] == W.parse_workload(f"{DENSE}@dp=4,tp=2").spec
+    assert row["step_time_ms"] > row["compute_ms"] > 0
+    assert row["comm_total_ms"] == pytest.approx(
+        row["comm_dp_ms"] + row["comm_tp_ms"] + row["comm_moe_ms"], rel=1e-6)
+
+
+def test_fault_sweep_appends_workload_fields():
+    a = Analysis("hypercube(3)")
+    sweep = a.fault_sweep(rates=[0.05], samples=2,
+                          workload=f"{DENSE}@dp=4,tp=2", workload_samples=1)
+    row = sweep.rows[0]
+    assert row["workload_step_mean"] > 0
+    assert row["workload_step_max"] >= row["workload_step_mean"]
+    assert 0.0 <= row["workload_dropped_frac_mean"] <= 1.0
+
+
+# --------------------------------------------------------------------------
+# spectral agreement statistic
+# --------------------------------------------------------------------------
+
+def test_spectral_rank_correlation_extremes_and_ties():
+    perfect = [dict(rho2=r, step_ms=s) for r, s in
+               [(4.0, 10.0), (3.0, 20.0), (2.0, 30.0), (1.0, 40.0)]]
+    assert W.spectral_rank_correlation(perfect) == pytest.approx(1.0)
+    reverse = [dict(rho2=r, step_ms=s) for r, s in
+               [(4.0, 40.0), (3.0, 30.0), (2.0, 20.0), (1.0, 10.0)]]
+    assert W.spectral_rank_correlation(reverse) == pytest.approx(-1.0)
+    assert W.spectral_rank_correlation([dict(rho2=1.0, step_ms=1.0)]) is None
+    assert W.spectral_rank_correlation(
+        [dict(rho2=1.0, step_ms=None), dict(rho2=None, step_ms=2.0)]) is None
+    # all-tied step times carry no ordering information
+    tied = [dict(rho2=r, step_ms=5.0) for r in (3.0, 2.0, 1.0)]
+    assert W.spectral_rank_correlation(tied) is None

@@ -9,7 +9,12 @@ nothing):
    so nothing is imported) appears in ``docs/api.md``;
 3. every registered topology family name (the ``@register("name", ...)``
    decorators in ``repro/core/topologies.py`` / ``ramanujan.py``, also read
-   by AST) appears in ``docs/api.md``.
+   by AST) appears in ``docs/api.md``;
+4. every ``*_COLUMNS`` constant exported by ``repro.api.survey`` — the name
+   AND every column it lists — appears backticked in ``docs/api.md``, so
+   a column addition can't silently skip the docs;
+5. every public symbol of ``repro.core.workloads`` appears in
+   ``docs/workloads.md`` (the subsystem page documents its own API).
 
 Exit code 0 when clean, 1 with a per-failure listing otherwise::
 
@@ -29,8 +34,11 @@ from typing import List
 _LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
 
 DOC_FILES = ["README.md", "docs/architecture.md", "docs/theory.md",
-             "docs/api.md", "docs/synthesis.md", "docs/simulation.md"]
+             "docs/api.md", "docs/synthesis.md", "docs/simulation.md",
+             "docs/workloads.md"]
 API_INIT = "src/repro/api/__init__.py"
+SURVEY_MODULE = "src/repro/api/survey.py"
+WORKLOADS_MODULE = "src/repro/core/workloads.py"
 REGISTER_FILES = ["src/repro/core/topologies.py", "src/repro/core/ramanujan.py",
                   "src/repro/core/synthesis.py"]
 
@@ -86,6 +94,58 @@ def _documented(name: str, text: str) -> bool:
     return re.search(r"`%s\b" % re.escape(name), text) is not None
 
 
+def _column_constants(path: pathlib.Path) -> dict:
+    """Every module-level ``*_COLUMNS`` list literal: name -> member list."""
+    out = {}
+    tree = ast.parse(path.read_text())
+    for node in tree.body:                 # top level only, not ast.walk
+        if isinstance(node, ast.Assign) and isinstance(node.value, ast.List):
+            for t in node.targets:
+                if isinstance(t, ast.Name) and t.id.endswith("_COLUMNS"):
+                    out[t.id] = list(ast.literal_eval(node.value))
+    return out
+
+
+def check_columns_coverage(root: pathlib.Path) -> List[str]:
+    """Every exported *_COLUMNS constant — name and members — in docs/api.md."""
+    api_md = root / "docs" / "api.md"
+    if not api_md.exists():
+        return []                          # already reported by api coverage
+    if not (root / SURVEY_MODULE).exists():
+        return [f"missing module {SURVEY_MODULE} (listed in SURVEY_MODULE)"]
+    text = api_md.read_text()
+    errors = []
+    exported = set(_module_all(root / API_INIT))
+    for const, members in _column_constants(root / SURVEY_MODULE).items():
+        if const not in exported:
+            errors.append(f"{SURVEY_MODULE}: {const} is not exported via "
+                          "repro.api __all__ (export it or drop the suffix)")
+        if not _documented(const, text):
+            errors.append(f"docs/api.md: column set {const!r} undocumented")
+        for col in members:
+            if not _documented(col, text):
+                errors.append(f"docs/api.md: column {col!r} ({const}) "
+                              "undocumented")
+    return errors
+
+
+def check_workloads_coverage(root: pathlib.Path) -> List[str]:
+    """Every repro.core.workloads public symbol named in docs/workloads.md."""
+    wl_md = root / "docs" / "workloads.md"
+    if not wl_md.exists():
+        return ["docs/workloads.md is missing"]
+    if not (root / WORKLOADS_MODULE).exists():
+        return [f"missing module {WORKLOADS_MODULE} "
+                "(listed in WORKLOADS_MODULE)"]
+    text = wl_md.read_text()
+    errors = []
+    for sym in _module_all(root / WORKLOADS_MODULE):
+        if not _documented(sym, text):
+            errors.append(f"docs/workloads.md: repro.core.workloads symbol "
+                          f"{sym!r} undocumented")
+    return errors
+
+
 def check_api_coverage(root: pathlib.Path) -> List[str]:
     """Every repro.api public symbol + registered family named in docs/api.md."""
     api_md = root / "docs" / "api.md"
@@ -123,6 +183,8 @@ def main(argv=None) -> int:
             print(f"  missing doc file: {rel}", file=sys.stderr)
     errors = check_links(root, md_files)
     errors += check_api_coverage(root)
+    errors += check_columns_coverage(root)
+    errors += check_workloads_coverage(root)
     missing = [rel for rel in DOC_FILES if not (root / rel).exists()]
     errors += [f"missing doc file {rel}" for rel in missing]
     if errors:
@@ -131,7 +193,8 @@ def main(argv=None) -> int:
             print(f"  - {e}", file=sys.stderr)
         return 1
     print(f"docs gate passed: {len(md_files)} files, links resolve, "
-          "repro.api and every registered family documented")
+          "repro.api, every registered family, every *_COLUMNS constant, "
+          "and repro.core.workloads documented")
     return 0
 
 
