@@ -96,6 +96,22 @@ GATES = {
         correctness=["correctness.cases", "correctness.all_fit_16gb"],
         timings=["total_seconds"],
     ),
+    "BENCH_scale.json": dict(
+        correctness=["correctness.cases", "correctness.scale_nodes",
+                     "scale_spec", "budget"],
+        # the datacenter-scale acceptance set: the sampled estimator's
+        # degenerate limit is bit-exact on all tier-1 families, and the
+        # n=65536 survey row lands inside the committed wall/RSS budgets
+        # with a certified diameter lower bound — all must hold in the
+        # CURRENT payload, not merely match a (possibly broken) baseline
+        required_true=["correctness.sample_fraction_one_bitwise",
+                       "correctness.within_wall_budget",
+                       "correctness.within_rss_budget",
+                       "correctness.diameter_lb_certified",
+                       "correctness.avg_hops_inside_ci",
+                       "correctness.saturation_throughput_positive"],
+        timings=["total_seconds"],
+    ),
 }
 
 #: timings are not ratio-gated while BOTH baseline and current sit below this

@@ -129,6 +129,15 @@ def _run_roofline():
            lambda rows: f"cells={len(rows)}")
 
 
+def _run_scale_bench():
+    from . import scale_bench
+
+    _timed("scale_survey_row_65536", scale_bench.run,
+           lambda rows: "within_budget=%s"
+           % (rows[0]["correctness"]["within_wall_budget"]
+              and rows[0]["correctness"]["within_rss_budget"]))
+
+
 #: name -> (runner, BENCH json this bench emits — None for ungated benches).
 #: Declaration order is execution order for the full suite.
 BENCHES: Dict[str, Tuple[Callable[[], None], str]] = {
@@ -142,6 +151,7 @@ BENCHES: Dict[str, Tuple[Callable[[], None], str]] = {
     "lps_bench": (_run_lps_bench, None),
     "collective_model": (_run_collective_model, "BENCH_collective_model.json"),
     "roofline": (_run_roofline, "BENCH_roofline.json"),
+    "scale": (_run_scale_bench, "BENCH_scale.json"),
 }
 
 

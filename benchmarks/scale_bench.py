@@ -1,0 +1,147 @@
+"""Datacenter-scale gate: one full survey row at n = 65536.
+
+Two halves, one payload:
+
+* **Exactness sweep** — on every tier-1 bench family (the nine
+  ``routing_eval`` SPECS), ``analyze_routing(sample_fraction=1.0)`` must
+  reproduce the exact all-sources analysis bit-for-bit (same dist / sigma
+  matrices, same scalars).  This pins the estimator's degenerate limit, so
+  the sampled path is provably the same algorithm, just on fewer rows.
+* **Scale row** — build ``xpander(65536,32)`` (budget=0: best-of-24 random
+  signings per lift level — construction, not search) and complete a full
+  survey row: chunked-Lanczos rho2 + 64-source sampled routing with
+  bootstrap CI + bias-corrected uniform traffic.  The row must finish
+  inside fixed wall-time and peak-RSS budgets (committed below), proving
+  the engines hold at datacenter scale, not just tier-1 scale.
+
+The committed budgets are deliberately loose (~4x measured wall, ~3x
+measured RSS) so they gate the complexity class — a quadratic-memory or
+all-sources regression blows through them — while the calibration-normalized
+``total_seconds`` gate in ``check_regression.py`` catches ordinary slowdowns.
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+import resource
+import time
+
+import numpy as np
+
+#: the tier-1 routing bench families (keep in sync with routing_eval.SPECS)
+SPECS = [
+    "lps(13,5)",
+    "slimfly(13)",
+    "torus(16,2)",
+    "hypercube(8)",
+    "ccc(6)",
+    "butterfly(3,4)",
+    "petersen_torus(5,4)",
+    "dragonfly",
+    "random_regular(256,6,0)",
+]
+
+SCALE_SPEC = "xpander(65536,32,0,0)"
+SCALE_NODES = 65536
+SCALE_SOURCES = 64            # sample_fraction = 64 / 65536 ~ 0.1%
+
+#: fixed scale-row budgets (measured: ~105 s wall, ~1.2 GiB peak RSS)
+WALL_BUDGET_SECONDS = 420.0
+RSS_BUDGET_GB = 4.0
+
+#: Moore bound: a 32-regular graph on 65536 nodes has diameter >= 4, and any
+#: single BFS source certifies >= half the true eccentricity spread — the
+#: sampled lower bound must land in [3, true diameter]
+DIAMETER_LB_FLOOR = 3
+
+COLUMNS = [
+    "instance", "nodes", "radix", "backend", "rho2",
+    "diameter_bfs", "diameter_lb", "diameter_ok", "avg_hops", "avg_hops_ci",
+    "path_diversity", "traffic_pattern", "max_link_load",
+    "saturation_throughput", "throughput_spectral", "seconds",
+]
+
+
+def _bitwise_case(spec: str) -> dict:
+    """sample_fraction=1.0 vs exact analyze_routing, field by field."""
+    from repro.api import build
+    from repro.core import routing as R
+
+    t0 = time.time()
+    topo = build(spec)
+    exact = R.analyze_routing(topo)
+    full = R.analyze_routing(topo, sample_fraction=1.0, seed=1)
+    bitwise = bool(
+        full.exact
+        and np.array_equal(full.sources, exact.sources)
+        and np.array_equal(full.dist, exact.dist)
+        and np.array_equal(full.sigma, exact.sigma)
+        and full.diameter == exact.diameter == full.diameter_lb
+        and full.avg_path_length == exact.avg_path_length
+        and np.array_equal(full.hop_histogram, exact.hop_histogram)
+        and full.path_diversity_mean == exact.path_diversity_mean
+        and full.avg_hops_ci == (exact.avg_path_length,
+                                 exact.avg_path_length))
+    return dict(family=topo.name, spec=spec, nodes=topo.n,
+                bitwise=bitwise, seconds=round(time.time() - t0, 3))
+
+
+def run(out_json: str = "benchmarks/out/BENCH_scale.json",
+        out_csv: str = "benchmarks/out/scale_bench.csv"):
+    from repro.api import survey
+    from repro.api.survey import csv_field
+
+    from .calibrate import measure_calibration
+
+    t0 = time.time()
+    cases = [_bitwise_case(spec) for spec in SPECS]
+
+    t_row = time.time()
+    res = survey([SCALE_SPEC], COLUMNS,
+                 routing=dict(pattern="uniform",
+                              sample_fraction=SCALE_SOURCES / SCALE_NODES,
+                              seed=0))
+    row = res.rows[0]
+    row_seconds = time.time() - t_row
+    rss_gb = resource.getrusage(resource.RUSAGE_SELF).ru_maxrss / 2 ** 20
+
+    lo, hi = row["avg_hops_ci"]
+    payload = dict(
+        bench="scale_survey_row",
+        total_seconds=round(time.time() - t0, 3),
+        calibration_seconds=round(measure_calibration(), 4),
+        scale_spec=SCALE_SPEC,
+        budget=dict(wall_seconds=WALL_BUDGET_SECONDS, rss_gb=RSS_BUDGET_GB,
+                    sources=SCALE_SOURCES),
+        scale_row=dict(row, seconds=round(row_seconds, 3),
+                       peak_rss_gb=round(rss_gb, 3)),
+        exactness=cases,
+        correctness=dict(
+            cases=len(cases),
+            sample_fraction_one_bitwise=all(c["bitwise"] for c in cases),
+            scale_nodes=row["nodes"],
+            within_wall_budget=bool(row_seconds <= WALL_BUDGET_SECONDS),
+            within_rss_budget=bool(rss_gb <= RSS_BUDGET_GB),
+            diameter_lb_certified=bool(
+                DIAMETER_LB_FLOOR <= row["diameter_lb"] <= row["diameter_bfs"]),
+            avg_hops_inside_ci=bool(lo <= row["avg_hops"] <= hi),
+            saturation_throughput_positive=bool(
+                row["saturation_throughput"] > 0),
+        ),
+    )
+    out = pathlib.Path(out_json)
+    out.parent.mkdir(parents=True, exist_ok=True)
+    out.write_text(json.dumps(payload, indent=2))
+
+    lines = [",".join(["family", "spec", "nodes", "bitwise", "seconds"])]
+    for c in cases:
+        lines.append(",".join(csv_field(c[k]) for k in
+                              ("family", "spec", "nodes", "bitwise",
+                               "seconds")))
+    pathlib.Path(out_csv).write_text("\n".join(lines) + "\n")
+    return [payload]
+
+
+if __name__ == "__main__":
+    rows = run()
+    print(json.dumps(rows[0]["correctness"], indent=2))

@@ -8,8 +8,10 @@ comparison.  The backend auto-selects by ``n``:
 * ``n <= dense_threshold`` — dense float64 numpy oracle (full spectrum,
   exact Fiedler vector);
 * larger — the matrix-free JAX Lanczos path (``rho2_lanczos``, top-Ritz
-  Fiedler approximation), optionally through the ``cayley_spmv`` Pallas
-  kernel, so device-scale instances never pay a dense eigendecomposition.
+  Fiedler approximation) through the :mod:`repro.kernels.spmv` dispatcher
+  (the Pallas kernel wherever it compiles, the jnp reference elsewhere;
+  ``use_pallas_kernel=True`` forces the kernel path), so device-scale
+  instances never pay a dense eigendecomposition.
 
 Nothing is computed in ``__init__``; every property memoizes on first access,
 so ``survey()`` can pre-populate (e.g. batched rho2 solves) without waste.
@@ -31,6 +33,7 @@ from repro.core import spectral as S
 from repro.core import traffic as TR
 from repro.core.graphs import Topology
 from repro.core.ramanujan import ramanujan_bound
+from repro.kernels import spmv as KS
 
 from .registry import REGISTRY, SpecError
 
@@ -93,11 +96,8 @@ class Analysis:
     # -- spectral quantities ----------------------------------------------
     def _matvec(self):
         tab, w = self.topo.gather_operands()
-        if self.use_pallas_kernel:
-            from repro.kernels.cayley_spmv.ops import kernel_matvec
-
-            return kernel_matvec(tab, w)
-        return S.table_matvec(tab, w)
+        backend = KS.kernel_backend() if self.use_pallas_kernel else None
+        return KS.spmv_matvec(tab, w, backend=backend)
 
     @cached_property
     def spectrum(self) -> np.ndarray:
@@ -226,43 +226,75 @@ class Analysis:
         )
 
     # -- measured path structure (routing & traffic) -----------------------
-    def routing(self, sources: Optional[Sequence[int]] = None
-                ) -> "R.RoutingResult":
-        """Measured path structure via batched all-sources BFS (lazy, cached).
+    def _routing_key(self, sample_fraction: Optional[float],
+                     seed: Optional[int]):
+        """Cache key of one routing configuration.  Exact analysis keys on
+        nothing (it is deterministic); sampled analyses key on BOTH the
+        fraction and the resolved seed so different samples never alias."""
+        if sample_fraction is None:
+            return ("exact",)
+        return ("sampled", float(sample_fraction),
+                self.seed if seed is None else int(seed))
+
+    def routing(self, sources: Optional[Sequence[int]] = None, *,
+                sample_fraction: Optional[float] = None,
+                seed: Optional[int] = None) -> "R.RoutingResult":
+        """Measured path structure via batched BFS (lazy, cached per config).
 
         Args:
-            sources: BFS source vertices; ``None`` (the cached default) runs
-                all n sources → exact diameter, hop-count distribution,
-                average shortest-path length, and per-pair minimal-path
-                counts.  A subset returns sampled statistics (not cached).
+            sources: explicit BFS source vertices (not cached).  ``None``
+                with no ``sample_fraction`` runs all n sources → exact
+                diameter, hop-count distribution, average shortest-path
+                length, and per-pair minimal-path counts.
+            sample_fraction: run BFS from a ``round(fraction * n)``-subset of
+                sources drawn by :func:`repro.core.routing.sample_sources` —
+                the datacenter-scale estimator (``diameter`` becomes a
+                certified lower bound, ``avg_hops_ci`` a bootstrap CI).
+                ``1.0`` reproduces the exact analysis bit-for-bit.  Cached
+                per ``(sample_fraction, seed)``.
+            seed: source-sampling seed; defaults to this session's seed.
 
         Returns:
             :class:`repro.core.routing.RoutingResult` (units: hops).
         """
         if sources is not None:
             return R.analyze_routing(self.topo, sources=sources)
-        if "_routing" not in self.__dict__:
-            self.__dict__["_routing"] = R.analyze_routing(self.topo)
-        return self.__dict__["_routing"]
+        cache = self.__dict__.setdefault("_routing_cache", {})
+        key = self._routing_key(sample_fraction, seed)
+        if key not in cache:
+            cache[key] = R.analyze_routing(
+                self.topo, sample_fraction=sample_fraction,
+                seed=self.seed if seed is None else int(seed))
+        return cache[key]
 
-    def traffic(self, pattern: str = "uniform") -> "TR.TrafficResult":
+    def traffic(self, pattern: str = "uniform", *,
+                sample_fraction: Optional[float] = None,
+                seed: Optional[int] = None) -> "TR.TrafficResult":
         """ECMP link-load accounting of one synthetic pattern (lazy, cached).
 
         Routes the named demand pattern (see
         :data:`repro.core.traffic.TRAFFIC_PATTERNS`) over all minimal paths
         with equal splitting, reusing this session's cached :meth:`routing`
-        matrices and (for ``adversarial``) Fiedler vector.
+        matrices and (for ``adversarial``) Fiedler vector.  With
+        ``sample_fraction``, only the sampled source rows are routed and the
+        loads carry the n/S unbiasedness correction (see
+        :func:`repro.core.traffic.evaluate_traffic`); cache entries key on
+        ``(pattern, sample_fraction, seed)``.
 
         Returns:
             :class:`repro.core.traffic.TrafficResult` — per-directed-link
             loads in injection units, max load, saturation throughput.
         """
         cache = self.__dict__.setdefault("_traffic", {})
-        if pattern not in cache:
+        key = (pattern,) + self._routing_key(sample_fraction, seed)
+        if key not in cache:
             fiedler = self.fiedler if pattern == "adversarial" else None
-            cache[pattern] = TR.evaluate_traffic(
-                self.topo, pattern, routing=self.routing(), fiedler=fiedler)
-        return cache[pattern]
+            cache[key] = TR.evaluate_traffic(
+                self.topo, pattern,
+                routing=self.routing(sample_fraction=sample_fraction,
+                                     seed=seed),
+                fiedler=fiedler)
+        return cache[key]
 
     # -- executed schedules (link-level simulation) ------------------------
     def network_model(self) -> "C.NetworkModel":

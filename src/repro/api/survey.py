@@ -100,13 +100,16 @@ FAULT_COLUMNS = [
 
 #: measured path-structure columns appended when ``survey(routing=...)``:
 #: exact BFS diameter (hops) + agreement with the registered closed form,
-#: average shortest-path length (hops), mean minimal-path count per pair,
-#: max directed link load (injection units) and saturation throughput under
-#: the configured traffic pattern, and the spectral throughput prediction.
+#: the certified diameter lower bound (= diameter when exact; the sampled
+#: estimator's guarantee otherwise), average shortest-path length (hops) with
+#: its 95% bootstrap CI (degenerate when exact), mean minimal-path count per
+#: pair, max directed link load (injection units) and saturation throughput
+#: under the configured traffic pattern, and the spectral throughput
+#: prediction.
 ROUTING_COLUMNS = [
-    "diameter_bfs", "diameter_ok", "avg_hops", "path_diversity",
-    "traffic_pattern", "max_link_load", "saturation_throughput",
-    "throughput_spectral",
+    "diameter_bfs", "diameter_lb", "diameter_ok", "avg_hops", "avg_hops_ci",
+    "path_diversity", "traffic_pattern", "max_link_load",
+    "saturation_throughput", "throughput_spectral",
 ]
 
 #: executed-schedule columns appended when ``survey(simulate=...)``: the
@@ -287,6 +290,8 @@ def _fault_values(a: Analysis, cfg: Dict[str, Any]) -> Dict[str, Any]:
 def _routing_config(routing: Union[bool, Dict[str, Any]]) -> Dict[str, Any]:
     cfg = {} if routing is True else dict(routing)
     cfg.setdefault("pattern", "uniform")
+    cfg.setdefault("sample_fraction", None)   # None = exact all-sources BFS
+    cfg.setdefault("seed", None)              # None = the session's seed
     return cfg
 
 
@@ -334,15 +339,21 @@ def _routing_values(a: Analysis, cfg: Dict[str, Any]) -> Dict[str, Any]:
     """Measured routing/traffic quantities for one survey row (ROUTING_COLUMNS)."""
     from repro.core.traffic import spectral_throughput_estimate
 
-    r = a.routing()
-    t = a.traffic(cfg["pattern"])
+    r = a.routing(sample_fraction=cfg["sample_fraction"], seed=cfg["seed"])
+    t = a.traffic(cfg["pattern"], sample_fraction=cfg["sample_fraction"],
+                  seed=cfg["seed"])
     cf = a.closed_forms
+    # exact runs assert equality with the closed form; a sampled run can only
+    # certify that its lower bound does not exceed it
     diameter_ok = None if not cf or "diameter" not in cf \
-        else bool(r.diameter == int(cf["diameter"]))
+        else bool(r.diameter == int(cf["diameter"])) if r.exact \
+        else bool(r.diameter_lb <= int(cf["diameter"]))
     return dict(
         diameter_bfs=r.diameter,
+        diameter_lb=r.diameter_lb,
         diameter_ok=diameter_ok,
         avg_hops=_round(r.avg_path_length, 4),
+        avg_hops_ci=[_round(c, 4) for c in r.avg_hops_ci],
         path_diversity=_round(r.path_diversity_mean, 4),
         traffic_pattern=t.pattern,
         max_link_load=_round(t.max_link_load, 4),
@@ -408,7 +419,12 @@ def survey(specs: Sequence[Union[str, Topology, Analysis]],
     "adversarial")``) runs the measured path-level analysis — batched
     all-sources BFS + minimal-path ECMP link loads under one synthetic
     traffic pattern — appending :data:`ROUTING_COLUMNS` to every row
-    (diameters/hops in hops, loads in injection units).
+    (diameters/hops in hops, loads in injection units).  Config keys
+    ``sample_fraction`` / ``seed`` switch to the sampled-source estimator
+    (``routing=dict(sample_fraction=0.01, seed=0)``): ``diameter_bfs`` is
+    then the certified lower bound ``diameter_lb``, ``avg_hops_ci`` its
+    bootstrap CI, and traffic loads carry the n/S correction — the
+    datacenter-scale path (``sample_fraction=1.0`` reproduces exact).
 
     ``simulate``: ``True`` or a config dict (``simulate=dict(collective=
     "all_reduce", algorithm="ring", payload=1 << 26, pattern="uniform")``)

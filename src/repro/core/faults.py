@@ -407,15 +407,12 @@ def fault_sweep(topo: Topology, rates: Sequence[float] = (0.02, 0.05, 0.1, 0.2),
             n_s, kmax, float(conn_rho2.min()))) \
             if conn_rho2.size and conn_rho2.min() > 1e-9 else None
         if routing:
-            from .routing import routing_stats_stacked
-            rng = np.random.default_rng(seed)
+            from .routing import routing_stats_stacked, sample_sources
             if routing_sources is None:
-                srcs = None if n_s <= 512 else \
-                    np.sort(rng.choice(n_s, size=64, replace=False))
+                srcs = None if n_s <= 512 else sample_sources(n_s, 64, seed)
             else:
                 srcs = None if routing_sources >= n_s else \
-                    np.sort(rng.choice(n_s, size=routing_sources,
-                                       replace=False))
+                    sample_sources(n_s, routing_sources, seed)
             stats = routing_stats_stacked(tabs, sources=srcs)
             # diameter stats only over samples whose sampled pairs all
             # connect — a shattered sample's max-over-reachable "diameter"

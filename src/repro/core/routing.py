@@ -29,18 +29,22 @@ time; histograms count ordered (source, target) pairs.
 from __future__ import annotations
 
 import dataclasses
+import functools
 import time
 from typing import Dict, List, Optional, Sequence, Tuple, Union
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.experimental import enable_x64
 
 from .graphs import Topology
+from repro.kernels import spmv as KS
 
 __all__ = [
     "RoutingResult", "bfs_distances", "shortest_path_counts",
-    "analyze_routing", "routing_stats_stacked", "DEFAULT_SOURCE_CHUNK",
+    "analyze_routing", "routing_stats_stacked", "sample_sources",
+    "DEFAULT_SOURCE_CHUNK",
 ]
 
 #: sources per jitted BFS/path-count call — bounds the (chunk, n, k) gather
@@ -78,22 +82,30 @@ def _bfs_dist_chunk(table: jnp.ndarray, dist0: jnp.ndarray) -> jnp.ndarray:
     return dist
 
 
-@jax.jit
-def _sigma_chunk(table: jnp.ndarray, dist: jnp.ndarray) -> jnp.ndarray:
+@functools.partial(jax.jit, static_argnames=("backend",))
+def _sigma_chunk(table: jnp.ndarray, dist: jnp.ndarray,
+                 backend: Optional[str] = None) -> jnp.ndarray:
     """Minimal-path counts sigma(s, v) for a (S, n) block of BFS distances.
 
     Layered DP over the BFS DAG: sigma at layer d is the sum of sigma over
-    neighbors at layer d-1.  Self-padded entries contribute nothing because a
-    vertex is never in the layer preceding its own.  float32: counts are exact
-    below 2^24, ample for the survey sizes (the largest observed count is the
-    hypercube's central-pair 10! ≈ 3.6e6).
+    neighbors at layer d-1 — one spmv per layer, routed through the
+    :mod:`repro.kernels.spmv` dispatcher.  Self-padded entries contribute
+    nothing because a vertex is never in the layer preceding its own.
+
+    Accumulates in float64 when x64 is enabled at trace time (the
+    :func:`shortest_path_counts` entry point wraps its calls in
+    ``enable_x64``): float32 counts go inexact past 2^24 and high-diversity
+    expanders blow through that well before n=10^5 — e.g. torus(32, 2)'s
+    antipodal pairs have C(32, 16) ≈ 6.0e8 minimal paths.
     """
+    bk = KS.resolve_backend(backend)
     dmax = jnp.maximum(dist.max(), 0)
-    sigma0 = (dist == 0).astype(jnp.float32)
+    acc_dt = jnp.float64 if jax.config.jax_enable_x64 else jnp.float32
+    sigma0 = (dist == 0).astype(acc_dt)
 
     def body(d, sigma):
         prev = jnp.where(dist == d - 1, sigma, 0.0)
-        contrib = prev[:, table].sum(axis=2)
+        contrib = jax.vmap(lambda p: KS.spmv(p, table, backend=bk))(prev)
         return jnp.where(dist == d, contrib, sigma)
 
     return jax.lax.fori_loop(1, dmax + 1, body, sigma0)
@@ -136,25 +148,48 @@ def bfs_distances(table: np.ndarray, sources: Optional[Sequence[int]] = None,
 
 
 def shortest_path_counts(table: np.ndarray, dist: np.ndarray,
-                         chunk: int = DEFAULT_SOURCE_CHUNK) -> np.ndarray:
+                         chunk: int = DEFAULT_SOURCE_CHUNK,
+                         backend: Optional[str] = None) -> np.ndarray:
     """Minimal-path counts sigma(s, t) for precomputed BFS distances.
 
     Args:
         table: (n, k) padded neighbor table (same one ``dist`` came from).
         dist: (S, n) int32 output of :func:`bfs_distances`.
         chunk: sources per jitted call.
+        backend: spmv backend for the layered DP (default: dispatcher's).
 
     Returns:
         (S, n) float64 counts of distinct shortest s→t paths (parallel edges
         count as distinct paths); 0 for unreachable targets, 1 on the diagonal.
+        The DP runs in float64 (``enable_x64`` scope), so counts are exact
+        integers up to 2^53 — past the 2^24 ceiling the old float32
+        accumulator hit on high-diversity families like torus(32, 2).
     """
     table = np.asarray(table)
     tab = jnp.asarray(table, dtype=jnp.int32)
     out = np.empty(dist.shape, dtype=np.float64)
-    for lo, hi in _chunks(dist.shape[0], chunk):
-        out[lo:hi] = np.asarray(
-            _sigma_chunk(tab, jnp.asarray(dist[lo:hi])), dtype=np.float64)
+    with enable_x64():
+        for lo, hi in _chunks(dist.shape[0], chunk):
+            out[lo:hi] = np.asarray(
+                _sigma_chunk(tab, jnp.asarray(dist[lo:hi]), backend=backend),
+                dtype=np.float64)
     return out
+
+
+def sample_sources(n: int, s: int, seed: int = 0) -> np.ndarray:
+    """``s`` distinct BFS source vertices, uniform without replacement.
+
+    Deterministic in ``(n, s, seed)``; returned sorted so downstream masking
+    is cache-friendly.  ``s >= n`` degenerates to *all* sources (``arange``),
+    which is what makes ``sample_fraction=1.0`` reproduce the exact
+    all-sources analysis bit-for-bit.
+    """
+    if s >= n:
+        return np.arange(n, dtype=np.int64)
+    if s < 1:
+        raise ValueError(f"need at least one source (got s={s})")
+    rng = np.random.default_rng(seed)
+    return np.sort(rng.choice(n, size=s, replace=False)).astype(np.int64)
 
 
 # --------------------------------------------------------------------------
@@ -184,13 +219,18 @@ class RoutingResult:
     path_diversity_min: float      # min sigma over reachable pairs (s != t)
     eccentricity: np.ndarray       # (S,) max finite hops per source
     seconds: float                 # wall time of the analysis
+    diameter_lb: int = 0           # certified lower bound (== diameter)
+    avg_hops_ci: Tuple[float, float] = (0.0, 0.0)  # 95% bootstrap CI
+    seed: Optional[int] = None     # source-sampling seed (None = explicit/all)
 
     def to_dict(self) -> Dict:
         """JSON-ready summary (drops the (S, n) matrices)."""
         return dict(
             name=self.name, n=self.n, sources=int(self.sources.size),
             exact=self.exact, diameter=int(self.diameter),
+            diameter_lb=int(self.diameter_lb),
             avg_path_length=round(float(self.avg_path_length), 6),
+            avg_hops_ci=[round(float(c), 6) for c in self.avg_hops_ci],
             hop_histogram=self.hop_histogram.tolist(),
             unreachable_pairs=int(self.unreachable_pairs),
             path_diversity_mean=round(float(self.path_diversity_mean), 4),
@@ -208,22 +248,67 @@ class RoutingResult:
             f"path diversity  : mean {self.path_diversity_mean:.2f} / "
             f"min {self.path_diversity_min:.0f} minimal paths per pair",
         ]
+        if not self.exact:
+            lo, hi = self.avg_hops_ci
+            lines.append(f"avg hops 95% CI : [{lo:.4f}, {hi:.4f}] (bootstrap)")
         if self.unreachable_pairs:
             lines.append(f"unreachable     : {self.unreachable_pairs} ordered pairs")
         return "\n".join(lines)
 
 
+def _bootstrap_avg_hops_ci(dist: np.ndarray, srcs: np.ndarray,
+                           seed: Optional[int], bootstrap: int,
+                           confidence: float) -> Tuple[float, float]:
+    """Percentile bootstrap CI for avg hops, resampling *source rows*.
+
+    Sources are the sampling unit (targets within a row are a census), so the
+    bootstrap resamples whole rows with replacement and recomputes the ratio
+    estimator sum(hops)/count(reachable) per replicate.  Deterministic in the
+    routing seed.  Slightly conservative: it ignores the variance reduction
+    from drawing sources *without* replacement, so observed coverage runs at
+    or above the nominal rate.
+    """
+    S = dist.shape[0]
+    finite = dist >= 0
+    offdiag = finite.copy()
+    offdiag[np.arange(S), srcs] = False
+    row_sum = np.where(offdiag, dist, 0).sum(axis=1).astype(np.float64)
+    row_cnt = offdiag.sum(axis=1).astype(np.float64)
+    rng = np.random.default_rng((0 if seed is None else seed) + 0x5EED)
+    idx = rng.integers(0, S, size=(bootstrap, S))
+    sums = row_sum[idx].sum(axis=1)
+    cnts = row_cnt[idx].sum(axis=1)
+    est = sums / np.maximum(cnts, 1.0)
+    alpha = (1.0 - confidence) / 2.0
+    return float(np.quantile(est, alpha)), float(np.quantile(est, 1.0 - alpha))
+
+
 def analyze_routing(topo: Union[Topology, Tuple[np.ndarray, int]],
                     sources: Optional[Sequence[int]] = None,
-                    chunk: int = DEFAULT_SOURCE_CHUNK) -> RoutingResult:
-    """Exact path-level analysis of one topology via batched BFS.
+                    chunk: int = DEFAULT_SOURCE_CHUNK, *,
+                    sample_fraction: Optional[float] = None,
+                    seed: int = 0,
+                    bootstrap: int = 256,
+                    confidence: float = 0.95,
+                    backend: Optional[str] = None) -> RoutingResult:
+    """Path-level analysis of one topology via batched BFS, exact or sampled.
 
     Args:
         topo: a :class:`Topology`, or a ``(table, n)`` pair of an already-built
             padded gather table (the degraded-operation entry point).
-        sources: BFS source vertices; default all n → exact diameter /
-            distribution.  A subset gives sampled statistics (diameter LB).
+        sources: explicit BFS source vertices; default all n → exact diameter /
+            distribution.  Mutually exclusive with ``sample_fraction``.
         chunk: sources per jitted call (memory knob).
+        sample_fraction: if set, BFS runs from ``round(fraction * n)`` sources
+            drawn by :func:`sample_sources` with ``seed``.  ``1.0`` selects
+            every vertex and reproduces the exact analysis bit-for-bit;
+            anything less returns estimates: ``diameter`` becomes the
+            certified lower bound ``diameter_lb`` and ``avg_path_length``
+            carries the bootstrap ``avg_hops_ci``.
+        seed: source-sampling seed (also seeds the bootstrap resampler).
+        bootstrap: bootstrap replicates for the CI.
+        confidence: CI coverage level (default 95%).
+        backend: spmv backend for the sigma DP (default: dispatcher's).
 
     Returns:
         :class:`RoutingResult` with distances, path counts, and summary stats.
@@ -234,10 +319,21 @@ def analyze_routing(topo: Union[Topology, Tuple[np.ndarray, int]],
     else:
         table, n = np.asarray(topo[0]), int(topo[1])
         name = f"table(n={n})"
-    srcs = np.arange(n, dtype=np.int64) if sources is None \
-        else np.asarray(list(sources), dtype=np.int64)
+    used_seed: Optional[int] = None
+    if sample_fraction is not None:
+        if sources is not None:
+            raise ValueError("pass either sources= or sample_fraction=, not both")
+        if not 0.0 < sample_fraction <= 1.0:
+            raise ValueError(f"sample_fraction must be in (0, 1] "
+                             f"(got {sample_fraction})")
+        srcs = sample_sources(n, max(1, int(round(sample_fraction * n))), seed)
+        used_seed = seed
+    elif sources is None:
+        srcs = np.arange(n, dtype=np.int64)
+    else:
+        srcs = np.asarray(list(sources), dtype=np.int64)
     dist = bfs_distances(table, srcs, chunk=chunk)
-    sigma = shortest_path_counts(table, dist, chunk=chunk)
+    sigma = shortest_path_counts(table, dist, chunk=chunk, backend=backend)
     finite = dist >= 0
     offdiag = finite.copy()
     offdiag[np.arange(srcs.size), srcs] = False   # drop s == t pairs
@@ -247,16 +343,21 @@ def analyze_routing(topo: Union[Topology, Tuple[np.ndarray, int]],
         np.zeros(1, dtype=np.int64)
     div = sigma[offdiag]
     ecc = np.where(finite, dist, -1).max(axis=1)
+    exact = bool(srcs.size == n)
+    avg = float(hops.mean()) if hops.size else 0.0
+    ci = (avg, avg) if exact else _bootstrap_avg_hops_ci(
+        dist, srcs, used_seed, bootstrap, confidence)
     return RoutingResult(
-        name=name, n=n, sources=srcs, exact=bool(srcs.size == n),
+        name=name, n=n, sources=srcs, exact=exact,
         dist=dist, sigma=sigma, diameter=diameter,
-        avg_path_length=float(hops.mean()) if hops.size else 0.0,
+        avg_path_length=avg,
         hop_histogram=hist.astype(np.int64),
         unreachable_pairs=int((~finite).sum()),
         path_diversity_mean=float(div.mean()) if div.size else 0.0,
         path_diversity_min=float(div.min()) if div.size else 0.0,
         eccentricity=ecc.astype(np.int64),
-        seconds=time.time() - t0)
+        seconds=time.time() - t0,
+        diameter_lb=diameter, avg_hops_ci=ci, seed=used_seed)
 
 
 # --------------------------------------------------------------------------

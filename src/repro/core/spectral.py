@@ -3,8 +3,15 @@
 The dense path is the test oracle and handles n <= ~4096.  The Lanczos path is
 the production solver: it never materializes the n x n matrix — the adjacency
 operator of a regular (multi)graph is applied through the (n, k) neighbor
-table, ``(A x)[i] = sum_j x[table[i, j]] + loops[i] * x[i]``, which is also the
-contract of the ``kernels/cayley_spmv`` Pallas kernel.
+table, ``(A x)[i] = sum_j x[table[i, j]] + loops[i] * x[i]``, routed through
+the universal spmv dispatcher (:mod:`repro.kernels.spmv`): the Pallas kernel
+where it compiles, the pure-jnp reference elsewhere.
+
+The batched solvers stream their (B, n, k) operand stacks through Lanczos in
+memory-bounded batch tiles (:data:`DEFAULT_BATCH_TILE_BYTES`), so a fault
+sweep or synthesis scoring pass at n ~ 10^5 never materializes B Lanczos
+bases at once; tiles are placed with
+:func:`repro.launch.mesh.shard_batch` so multi-device hosts split the batch.
 
 Relations used throughout (k-regular G):  rho_2 = k * mu_2 = k - lambda_2.
 """
@@ -17,6 +24,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.kernels import spmv as KS
+from repro.launch import mesh as _mesh
+
 from .graphs import Topology
 
 __all__ = [
@@ -25,13 +35,30 @@ __all__ = [
     "fiedler_vector", "table_matvec", "lanczos_tridiag", "lanczos_extremes",
     "lanczos_top_ritz", "rho2_lanczos", "rho2_lanczos_batched",
     "rho2_laplacian_batched", "signed_extremes_batched", "fiedler_lanczos",
-    "DENSE_THRESHOLD",
+    "DENSE_THRESHOLD", "DEFAULT_BATCH_TILE_BYTES",
 ]
 
 #: graphs at or below this order use the dense float64 oracle; larger ones go
 #: through the matrix-free JAX Lanczos path.  The Analysis/survey API reads
 #: this as its default auto-selection cutover.
 DENSE_THRESHOLD = 4096
+
+#: memory budget per batched-Lanczos tile: the batch axis of a (B, n, k)
+#: operand stack is chunked so one tile's working set (per-sample Lanczos
+#: basis (m+1, n) f32 + gather operands) stays under this many bytes.
+#: Tier-1 sizes (n <= 2184, B <= 48) always fit one tile, so chunking is
+#: invisible there; at n = 65536 a 24-candidate signing batch streams in
+#: a few tiles instead of 7 GB at once.
+DEFAULT_BATCH_TILE_BYTES = 256 << 20
+
+
+def _batch_tile(B: int, n: int, k: int, m: int,
+                batch_chunk: Optional[int]) -> int:
+    """Samples per batched-Lanczos tile (explicit override or byte budget)."""
+    if batch_chunk is not None:
+        return max(1, min(int(batch_chunk), B))
+    per_sample = 4 * n * (m + 2 * k + 16)   # V basis + operands + workspace
+    return max(1, min(B, DEFAULT_BATCH_TILE_BYTES // max(per_sample, 1)))
 
 
 # --------------------------------------------------------------------------
@@ -82,19 +109,17 @@ def fiedler_vector(topo: Topology) -> np.ndarray:
 # device-scale Lanczos (JAX)
 # --------------------------------------------------------------------------
 
-def table_matvec(table: np.ndarray, loops: Optional[np.ndarray] = None
+def table_matvec(table: np.ndarray, loops: Optional[np.ndarray] = None,
+                 backend: Optional[str] = None
                  ) -> Callable[[jnp.ndarray], jnp.ndarray]:
-    """Adjacency operator from an (n, k) neighbor table (gather-sum form)."""
-    tab = jnp.asarray(table, dtype=jnp.int32)
-    lw = None if loops is None else jnp.asarray(loops, dtype=jnp.float32)
+    """Adjacency operator from an (n, k) neighbor table.
 
-    def mv(x: jnp.ndarray) -> jnp.ndarray:
-        y = jnp.sum(x[tab], axis=1)
-        if lw is not None:
-            y = y + lw * x
-        return y
-
-    return mv
+    Routed through the universal spmv dispatcher: the Pallas kernel where it
+    compiles, the pure-jnp gather-sum reference elsewhere.  ``backend``
+    (``"ref"`` / ``"pallas"`` / ``"pallas_interpret"``) is resolved once at
+    closure creation; ``None`` follows :func:`repro.kernels.spmv.resolve_backend`.
+    """
+    return KS.spmv_matvec(table, loops, backend=backend)
 
 
 def _lanczos_scan(op: Callable, v0: jnp.ndarray, m: int
@@ -282,20 +307,24 @@ def fiedler_lanczos(topo: Topology, iters: int = 200, seed: int = 0) -> np.ndarr
     return ritz
 
 
-@functools.partial(jax.jit, static_argnames=("m",))
+@functools.partial(jax.jit, static_argnames=("m", "backend"))
 def _lanczos_tridiag_batched(tables: jnp.ndarray, weights: jnp.ndarray,
-                             v0s: jnp.ndarray, m: int
+                             v0s: jnp.ndarray, m: int,
+                             backend: Optional[str] = None
                              ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """vmapped ones-deflated Lanczos over B same-shape neighbor tables.
 
     ``tables``: (B, n, k) int32, ``weights``: (B, n) float32 per-vertex loop
     weights, ``v0s``: (B, n) float32 start vectors.  Returns stacked
-    (alphas (B, m), betas (B, m)).
+    (alphas (B, m), betas (B, m)).  ``backend`` is static — the resolved
+    spmv route is baked into the trace.
     """
+    bk = KS.resolve_backend(backend)
+
     def run(tab, lw, v0):
         def op(x):
             x = x - jnp.mean(x)                      # project out ones
-            y = jnp.sum(x[tab], axis=1) + lw * x
+            y = KS.spmv(x, tab, lw, backend=bk)
             return y - jnp.mean(y)
 
         alphas, betas, _ = _lanczos_scan(op, v0 - jnp.mean(v0), m)
@@ -335,9 +364,10 @@ def _batched_ritz_extremes(alphas: jnp.ndarray, betas: jnp.ndarray
     return lmin, lmax
 
 
-@functools.partial(jax.jit, static_argnames=("m",))
+@functools.partial(jax.jit, static_argnames=("m", "backend"))
 def _lap_lanczos_batched(tables: jnp.ndarray, weights: jnp.ndarray,
-                         degs: jnp.ndarray, v0s: jnp.ndarray, m: int
+                         degs: jnp.ndarray, v0s: jnp.ndarray, m: int,
+                         backend: Optional[str] = None
                          ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """vmapped ones-deflated *Laplacian* Lanczos over B same-shape tables.
 
@@ -355,11 +385,13 @@ def _lap_lanczos_batched(tables: jnp.ndarray, weights: jnp.ndarray,
     roundoff reintroduce the ones component, whose ghost 0 Ritz value poisons
     the *smallest* eigenvalue — exactly the one this path reports.
     """
+    bk = KS.resolve_backend(backend)
+
     def run(tab, lw, deg, v0):
         c = jnp.max(deg) + 2.0
 
         def op(x):
-            lx = deg * x - (jnp.sum(x[tab], axis=1) + lw * x)
+            lx = deg * x - KS.spmv(x, tab, lw, backend=bk)
             return lx + c * jnp.mean(x)
 
         alphas, betas, _ = _lanczos_scan(op, v0, m)
@@ -368,10 +400,22 @@ def _lap_lanczos_batched(tables: jnp.ndarray, weights: jnp.ndarray,
     return jax.vmap(run)(tables, weights, degs, v0s)
 
 
+def _tile_indices(lo: int, hi: int, tile: int) -> Tuple[np.ndarray, int]:
+    """Index vector for one batch tile, padded to ``tile`` samples by
+    repeating sample ``lo`` so every tile replays one compiled solve (the
+    padded rows are recomputed garbage, sliced off by the caller)."""
+    idx = np.arange(lo, hi, dtype=np.int64)
+    if idx.size < tile:
+        idx = np.concatenate([idx, np.full(tile - idx.size, lo, np.int64)])
+    return idx, hi - lo
+
+
 def rho2_laplacian_batched(tables: np.ndarray, weights: np.ndarray,
                            degs: np.ndarray, iters: int = 160,
-                           seed: int = 0) -> np.ndarray:
-    """rho_2 for B (possibly irregular) graphs in ONE vmapped Lanczos solve.
+                           seed: int = 0, *,
+                           batch_chunk: Optional[int] = None,
+                           backend: Optional[str] = None) -> np.ndarray:
+    """rho_2 for B (possibly irregular) graphs in one *streamed* Lanczos solve.
 
     Operands are stacked padded gather forms — ``tables`` (B, n, k) int32,
     ``weights`` (B, n) per-vertex self weights (loop + padding compensation),
@@ -381,22 +425,41 @@ def rho2_laplacian_batched(tables: np.ndarray, weights: np.ndarray,
     (~0 for disconnected samples: the extra kernel vector survives the ones
     deflation).  This is the fault-sweep engine: B degraded instances never
     cost B Python-level solves.
+
+    The batch axis streams through the vmapped solve in memory-bounded tiles
+    (``batch_chunk`` samples each; default from
+    :data:`DEFAULT_BATCH_TILE_BYTES` — tier-1 sizes always fit one tile, so
+    results are identical to the unchunked solve).  Tiles are placed with
+    :func:`repro.launch.mesh.shard_batch`.  ``backend`` picks the spmv route
+    (default: kernel where it compiles, reference on CPU).
     """
     tables = np.asarray(tables)
-    B, n, _ = tables.shape
+    weights, degs = np.asarray(weights), np.asarray(degs)
+    B, n, k = tables.shape
     key = jax.random.PRNGKey(seed)
-    v0s = jax.random.normal(key, (B, n), dtype=jnp.float32)
-    alphas, betas = _lap_lanczos_batched(
-        jnp.asarray(tables, dtype=jnp.int32),
-        jnp.asarray(weights, dtype=jnp.float32),
-        jnp.asarray(degs, dtype=jnp.float32), v0s, iters)
+    v0s = np.asarray(jax.random.normal(key, (B, n), dtype=jnp.float32))
+    tile = _batch_tile(B, n, k, iters, batch_chunk)
+    bk = KS.resolve_backend(backend)
+    alphas = np.empty((B, iters), dtype=np.float64)
+    betas = np.empty((B, iters), dtype=np.float64)
+    for lo in range(0, B, tile):
+        idx, keep = _tile_indices(lo, min(lo + tile, B), tile)
+        ops = _mesh.shard_batch(
+            jnp.asarray(tables[idx], dtype=jnp.int32),
+            jnp.asarray(weights[idx], dtype=jnp.float32),
+            jnp.asarray(degs[idx], dtype=jnp.float32),
+            jnp.asarray(v0s[idx]))
+        a, b = _lap_lanczos_batched(*ops, iters, backend=bk)
+        alphas[lo:lo + keep] = np.asarray(a, dtype=np.float64)[:keep]
+        betas[lo:lo + keep] = np.asarray(b, dtype=np.float64)[:keep]
     lmin, _ = _batched_ritz_extremes(alphas, betas)
     return np.maximum(lmin, 0.0)
 
 
-@functools.partial(jax.jit, static_argnames=("m",))
+@functools.partial(jax.jit, static_argnames=("m", "backend"))
 def _signed_lanczos_batched(table: jnp.ndarray, slot_signs: jnp.ndarray,
-                            v0s: jnp.ndarray, m: int
+                            v0s: jnp.ndarray, m: int,
+                            backend: Optional[str] = None
                             ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """vmapped Lanczos on B *signed* adjacency operators sharing one table.
 
@@ -404,12 +467,15 @@ def _signed_lanczos_batched(table: jnp.ndarray, slot_signs: jnp.ndarray,
     the batch; ``slot_signs``: (B, n, k) float32 per-slot ±1 signs (the
     signing of edge e written into both of e's table slots); ``v0s``: (B, n)
     start vectors.  The operator is ``(A_s x)[i] = sum_j s[i,j] x[table[i,j]]``
-    — the Bilu–Linial signed adjacency in the padded gather-table contract.
+    — the Bilu–Linial signed adjacency in the padded gather-table contract,
+    applied through the spmv dispatcher's ``signs=`` form.
     No deflation: a signing destroys the trivial ±k eigenpairs.
     """
+    bk = KS.resolve_backend(backend)
+
     def run(sg, v0):
         def op(x):
-            return jnp.sum(sg * x[table], axis=1)
+            return KS.spmv(x, table, signs=sg, backend=bk)
 
         alphas, betas, _ = _lanczos_scan(op, v0, m)
         return alphas, betas
@@ -418,9 +484,11 @@ def _signed_lanczos_batched(table: jnp.ndarray, slot_signs: jnp.ndarray,
 
 
 def signed_extremes_batched(table: np.ndarray, slot_signs: np.ndarray,
-                            iters: int = 90, seed: int = 0
+                            iters: int = 90, seed: int = 0, *,
+                            batch_chunk: Optional[int] = None,
+                            backend: Optional[str] = None
                             ) -> Tuple[np.ndarray, np.ndarray]:
-    """(lambda_max, lambda_min) of B signed adjacencies in ONE vmapped solve.
+    """(lambda_max, lambda_min) of B signed adjacencies in one streamed solve.
 
     This is the synthesis subsystem's objective oracle: by Bilu–Linial the
     eigenvalues of the signed adjacency A_s are exactly the NEW eigenvalues a
@@ -429,13 +497,29 @@ def signed_extremes_batched(table: np.ndarray, slot_signs: np.ndarray,
     Ramanujan criterion).  Operands follow :func:`_signed_lanczos_batched`;
     returns float64 arrays (lmax (B,), lmin (B,)), breakdown-truncated so
     spurious zero Ritz rows never contaminate either end.
+
+    Like :func:`rho2_laplacian_batched`, the batch axis streams through the
+    vmapped solve in memory-bounded tiles (``batch_chunk`` /
+    :data:`DEFAULT_BATCH_TILE_BYTES`); tier-1 sizes fit one tile and are
+    bit-identical to the unchunked solve.
     """
     slot_signs = np.asarray(slot_signs)
-    B, n, _ = slot_signs.shape
-    v0s = jax.random.normal(jax.random.PRNGKey(seed), (B, n), dtype=jnp.float32)
-    alphas, betas = _signed_lanczos_batched(
-        jnp.asarray(table, dtype=jnp.int32),
-        jnp.asarray(slot_signs, dtype=jnp.float32), v0s, iters)
+    B, n, k = slot_signs.shape
+    v0s = np.asarray(jax.random.normal(jax.random.PRNGKey(seed), (B, n),
+                                       dtype=jnp.float32))
+    tab = jnp.asarray(table, dtype=jnp.int32)
+    tile = _batch_tile(B, n, k, iters, batch_chunk)
+    bk = KS.resolve_backend(backend)
+    alphas = np.empty((B, iters), dtype=np.float64)
+    betas = np.empty((B, iters), dtype=np.float64)
+    for lo in range(0, B, tile):
+        idx, keep = _tile_indices(lo, min(lo + tile, B), tile)
+        sg, v0 = _mesh.shard_batch(
+            jnp.asarray(slot_signs[idx], dtype=jnp.float32),
+            jnp.asarray(v0s[idx]))
+        a, b = _signed_lanczos_batched(tab, sg, v0, iters, backend=bk)
+        alphas[lo:lo + keep] = np.asarray(a, dtype=np.float64)[:keep]
+        betas[lo:lo + keep] = np.asarray(b, dtype=np.float64)[:keep]
     lmin, lmax = _batched_ritz_extremes(alphas, betas)
     return lmax, lmin
 

@@ -43,6 +43,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..api.registry import register
+from ..kernels import spmv as KS
 from . import bounds as B
 from . import spectral as S
 from .graphs import Topology
@@ -99,19 +100,23 @@ def signed_slot_operands(topo: Topology) -> Tuple[np.ndarray, np.ndarray]:
 # jitted simulated-annealing flip refinement
 # --------------------------------------------------------------------------
 
-def _lam_estimator(table, shift: float, est_iters: int, objective: str):
+def _lam_estimator(table, shift: float, est_iters: int, objective: str,
+                   backend: Optional[str] = None):
     """Traceable objective estimate: a small warm-started Lanczos solve.
 
     For ``objective="gap"`` the operator is A_s + shift·I (PSD for
     shift >= k) and the estimate is its top Ritz value − shift, i.e.
     lambda_max(A_s) — the eigenvalue binding the lift's rho2.  For
     ``"radius"`` the raw A_s tridiagonal is read at both ends,
-    max(|lambda_min|, lambda_max) — the Ramanujan criterion.  Returns
+    max(|lambda_min|, lambda_max) — the Ramanujan criterion.  The signed
+    matvec routes through the :mod:`repro.kernels.spmv` dispatcher.  Returns
     (estimate, next warm vector).
     """
+    bk = KS.resolve_backend(backend)
+
     def est(sg, v0):
         def op(x):
-            y = jnp.sum(sg * x[table], axis=1)
+            y = KS.spmv(x, table, signs=sg, backend=bk)
             if objective == "gap":
                 y = y + shift * x
             return y
@@ -134,9 +139,11 @@ def _lam_estimator(table, shift: float, est_iters: int, objective: str):
     return est
 
 
-@functools.partial(jax.jit, static_argnames=("steps", "est_iters", "objective"))
+@functools.partial(jax.jit, static_argnames=("steps", "est_iters", "objective",
+                                             "backend"))
 def _anneal_signings(table, edge_slot, signings, key, shift, temp0, *,
-                     steps: int, est_iters: int, objective: str):
+                     steps: int, est_iters: int, objective: str,
+                     backend: Optional[str] = None):
     """SA single-flip refinement of B signings, fully on-device.
 
     Each ``fori_loop`` step flips one random edge sign per candidate,
@@ -149,7 +156,8 @@ def _anneal_signings(table, edge_slot, signings, key, shift, temp0, *,
     """
     Bc, m = signings.shape
     n = table.shape[0]
-    est = _lam_estimator(table, shift, est_iters, objective)
+    est = _lam_estimator(table, shift, est_iters, objective,
+                         backend=KS.resolve_backend(backend))
 
     key, k0 = jax.random.split(key)
     v0s = jax.random.normal(k0, (Bc, n), dtype=jnp.float32)

@@ -37,9 +37,10 @@ Patterns (:data:`TRAFFIC_PATTERNS`)
 from __future__ import annotations
 
 import dataclasses
+import functools
 import math
 import time
-from typing import Dict, Optional, Tuple, Union
+from typing import Dict, Optional, Sequence, Tuple, Union
 
 import jax
 import jax.numpy as jnp
@@ -47,10 +48,11 @@ import numpy as np
 
 from .graphs import Topology
 from .routing import DEFAULT_SOURCE_CHUNK, RoutingResult, analyze_routing
+from repro.kernels import spmv as KS
 
 __all__ = [
-    "TRAFFIC_PATTERNS", "TrafficResult", "demand_matrix", "ecmp_link_loads",
-    "evaluate_traffic", "spectral_throughput_estimate",
+    "TRAFFIC_PATTERNS", "TrafficResult", "demand_matrix", "demand_rows",
+    "ecmp_link_loads", "evaluate_traffic", "spectral_throughput_estimate",
 ]
 
 TRAFFIC_PATTERNS = ("uniform", "bit_complement", "transpose", "neighbor",
@@ -69,6 +71,61 @@ def _permutation_demands(perm: np.ndarray) -> np.ndarray:
     s = np.arange(n)
     keep = perm != s
     D[s[keep], perm[keep]] = 1.0
+    return D
+
+
+def _pattern_permutation(pattern: str, n: int, *,
+                         fiedler: Optional[np.ndarray] = None) -> np.ndarray:
+    """The permutation behind a permutation-type pattern (O(n log n), no
+    (n, n) matrix — the scalable core shared by matrix and row builders)."""
+    if pattern == "bit_complement":
+        return n - 1 - np.arange(n)
+    if pattern == "transpose":
+        m = math.isqrt(n)
+        if m * m != n:
+            raise ValueError(f"transpose traffic needs square n, got {n}")
+        s = np.arange(n)
+        return (s % m) * m + s // m
+    if pattern == "adversarial":
+        if fiedler is None:
+            raise ValueError("adversarial traffic needs the Fiedler vector")
+        order = np.argsort(np.asarray(fiedler, dtype=np.float64), kind="stable")
+        perm = np.empty(n, dtype=np.int64)
+        perm[order] = order[::-1]
+        return perm
+    raise ValueError(f"unknown traffic pattern {pattern!r} "
+                     f"(known: {TRAFFIC_PATTERNS})")
+
+
+def demand_rows(pattern: str, n: int, sources: Sequence[int], *,
+                fiedler: Optional[np.ndarray] = None) -> np.ndarray:
+    """The ``sources`` rows of :func:`demand_matrix` without materializing it.
+
+    This is the datacenter-scale entry point: an (n, n) float64 demand matrix
+    at n = 65536 is 32 GiB, but a sampled traffic evaluation only ever routes
+    the S sampled source rows.  Row order follows ``sources``.  Exactly equal
+    to ``demand_matrix(pattern, n)[sources]`` (tested), so the sampled path
+    inherits every pattern's semantics.
+    """
+    srcs = np.asarray(list(sources), dtype=np.int64)
+    S = srcs.size
+    rows = np.arange(S)
+    if pattern == "uniform":
+        if n < 2:
+            raise ValueError("uniform traffic needs n >= 2")
+        D = np.full((S, n), 1.0 / (n - 1))
+        D[rows, srcs] = 0.0
+        return D
+    if pattern == "neighbor":
+        D = np.zeros((S, n))
+        np.add.at(D, (rows, (srcs + 1) % n), 0.5)
+        np.add.at(D, (rows, (srcs - 1) % n), 0.5)
+        D[rows, srcs] = 0.0
+        return D
+    perm = _pattern_permutation(pattern, n, fiedler=fiedler)
+    D = np.zeros((S, n))
+    keep = perm[srcs] != srcs
+    D[rows[keep], perm[srcs[keep]]] = 1.0
     return D
 
 
@@ -92,14 +149,6 @@ def demand_matrix(pattern: str, n: int, *,
         D = np.full((n, n), 1.0 / (n - 1))
         np.fill_diagonal(D, 0.0)
         return D
-    if pattern == "bit_complement":
-        return _permutation_demands(n - 1 - np.arange(n))
-    if pattern == "transpose":
-        m = math.isqrt(n)
-        if m * m != n:
-            raise ValueError(f"transpose traffic needs square n, got {n}")
-        s = np.arange(n)
-        return _permutation_demands((s % m) * m + s // m)
     if pattern == "neighbor":
         D = np.zeros((n, n))
         s = np.arange(n)
@@ -107,33 +156,30 @@ def demand_matrix(pattern: str, n: int, *,
         D[s, (s - 1) % n] += 0.5
         np.fill_diagonal(D, 0.0)   # n <= 2 degenerates to self-traffic
         return D
-    if pattern == "adversarial":
-        if fiedler is None:
-            raise ValueError("adversarial traffic needs the Fiedler vector")
-        order = np.argsort(np.asarray(fiedler, dtype=np.float64), kind="stable")
-        perm = np.empty(n, dtype=np.int64)
-        perm[order] = order[::-1]
-        return _permutation_demands(perm)
-    raise ValueError(f"unknown traffic pattern {pattern!r} "
-                     f"(known: {TRAFFIC_PATTERNS})")
+    return _permutation_demands(_pattern_permutation(pattern, n,
+                                                     fiedler=fiedler))
 
 
 # --------------------------------------------------------------------------
 # ECMP link loads (Brandes-style backward accumulation, batched over sources)
 # --------------------------------------------------------------------------
 
-@jax.jit
+@functools.partial(jax.jit, static_argnames=("backend",))
 def _ecmp_loads_chunk(table: jnp.ndarray, dist: jnp.ndarray,
-                      sigma: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+                      sigma: jnp.ndarray, w: jnp.ndarray,
+                      backend: Optional[str] = None) -> jnp.ndarray:
     """Summed per-edge ECMP loads for a (S, n) block of sources.
 
     For each source: backward accumulation over BFS layers d = dmax..1 of
     ``g(v) = w(v) + sigma(v) * sum_{v' in succ(v)} g(v')/sigma(v')`` (the
-    demand subtree routed through v), then the per-slot directed edge loads
-    ``load[u, j] = sigma(u) * g(v)/sigma(v)`` for ``v = table[u, j]`` one hop
-    further out.  Self-padded slots have equal dist and drop out of the mask.
-    Returns the (n, k) load table summed over the block's sources.
+    demand subtree routed through v) — the per-layer neighbor sum is one spmv
+    through the :mod:`repro.kernels.spmv` dispatcher — then the per-slot
+    directed edge loads ``load[u, j] = sigma(u) * g(v)/sigma(v)`` for
+    ``v = table[u, j]`` one hop further out.  Self-padded slots have equal
+    dist and drop out of the mask.  Returns the (n, k) load table summed over
+    the block's sources.
     """
+    bk = KS.resolve_backend(backend)
     dmax = jnp.maximum(dist.max(), 0)
 
     def one(dist_s, sigma_s, w_s):
@@ -142,7 +188,7 @@ def _ecmp_loads_chunk(table: jnp.ndarray, dist: jnp.ndarray,
         def back(i, g):
             d = dmax - i
             h = jnp.where(dist_s == d, g / sigma_safe, 0.0)
-            inc = h[table].sum(axis=1)
+            inc = KS.spmv(h, table, backend=bk)
             return jnp.where(dist_s == d - 1, g + sigma_s * inc, g)
 
         g = jax.lax.fori_loop(0, dmax, back, w_s)
@@ -155,7 +201,8 @@ def _ecmp_loads_chunk(table: jnp.ndarray, dist: jnp.ndarray,
 
 def ecmp_link_loads(table: np.ndarray, dist: np.ndarray, sigma: np.ndarray,
                     demands: np.ndarray,
-                    chunk: int = DEFAULT_SOURCE_CHUNK) -> np.ndarray:
+                    chunk: int = DEFAULT_SOURCE_CHUNK,
+                    backend: Optional[str] = None) -> np.ndarray:
     """Directed link loads under minimal-path ECMP routing of ``demands``.
 
     Args:
@@ -182,7 +229,8 @@ def ecmp_link_loads(table: np.ndarray, dist: np.ndarray, sigma: np.ndarray,
         loads += np.asarray(_ecmp_loads_chunk(
             tab, jnp.asarray(dist[lo:hi]),
             jnp.asarray(sigma[lo:hi], dtype=jnp.float32),
-            jnp.asarray(demands[lo:hi], dtype=jnp.float32)), dtype=np.float64)
+            jnp.asarray(demands[lo:hi], dtype=jnp.float32),
+            backend=backend), dtype=np.float64)
     return loads
 
 
@@ -212,11 +260,13 @@ class TrafficResult:
     saturation_throughput: float   # 1 / max_link_load (inf if no load)
     conservation_error: float
     seconds: float
+    exact: bool = True             # False = sampled-source estimate
+    sample_correction: float = 1.0  # n/S factor applied to loads and totals
 
     def to_dict(self) -> Dict:
         """JSON-ready summary (drops the (n, k) load table)."""
         return dict(
-            name=self.name, pattern=self.pattern, n=self.n,
+            name=self.name, pattern=self.pattern, n=self.n, exact=self.exact,
             total_demand=round(self.total_demand, 6),
             dropped_demand=round(self.dropped_demand, 6),
             avg_hops=round(self.avg_hops, 6),
@@ -244,19 +294,29 @@ def evaluate_traffic(topo: Union[Topology, Tuple[np.ndarray, int]],
                      routing: Optional[RoutingResult] = None,
                      fiedler: Optional[np.ndarray] = None,
                      demands: Optional[np.ndarray] = None,
-                     chunk: int = DEFAULT_SOURCE_CHUNK) -> TrafficResult:
+                     chunk: int = DEFAULT_SOURCE_CHUNK,
+                     backend: Optional[str] = None) -> TrafficResult:
     """Route one synthetic pattern over a topology and account link loads.
 
     Args:
         topo: a :class:`Topology` or ``(table, n)`` padded-table pair.
         pattern: name from :data:`TRAFFIC_PATTERNS` (ignored when ``demands``
             is given, which then also names the result's pattern ``custom``).
-        routing: reuse an all-sources :class:`RoutingResult` (e.g. the one a
-            lazy Analysis session already computed); computed here if absent.
+        routing: reuse a :class:`RoutingResult` (e.g. the one a lazy Analysis
+            session already computed); computed here if absent.  A *sampled*
+            routing result (``exact=False``) is accepted: only its S source
+            rows are routed and every extensive figure (loads, totals) is
+            scaled by the unbiasedness correction n/S — uniform sources make
+            the scaled per-link loads and totals unbiased estimators of the
+            full-census figures.  ``max_link_load`` is then a noisy order
+            statistic (biased low: unsampled sources contribute nothing), so
+            treat sampled saturation throughput as an optimistic estimate.
         fiedler: Fiedler vector for the ``adversarial`` pattern.
         demands: explicit (n, n) demand matrix in injection units, overriding
-            ``pattern``.
+            ``pattern`` (sampled routing uses its S source rows).
         chunk: sources per jitted call.
+        backend: spmv backend for the load accumulation (default:
+            dispatcher's).
 
     Returns:
         :class:`TrafficResult` with per-directed-link loads and the
@@ -271,37 +331,41 @@ def evaluate_traffic(topo: Union[Topology, Tuple[np.ndarray, int]],
         name = f"table(n={n})"
     if routing is None:
         routing = analyze_routing((table, n), chunk=chunk)
-    if not routing.exact:
-        raise ValueError("traffic evaluation needs an all-sources routing "
-                         f"result (got {routing.sources.size}/{n} sources)")
+    srcs = routing.sources
+    S = srcs.size
+    scale = 1.0 if routing.exact else n / S
     if demands is None:
-        D = demand_matrix(pattern, n, fiedler=fiedler)
+        D = demand_rows(pattern, n, srcs, fiedler=fiedler)
     else:
         D = np.asarray(demands, dtype=np.float64)
         if D.shape != (n, n):
             raise ValueError(f"demands must be ({n}, {n}), got {D.shape}")
+        D = D[srcs]
         pattern = "custom"
     reachable = routing.dist >= 0
     served = np.where(reachable, D, 0.0)
-    np.fill_diagonal(served, 0.0)
+    served[np.arange(S), srcs] = 0.0
     total = float(served.sum())
-    dropped = float(D.sum() - np.trace(D) - total)
+    dropped = float(D.sum() - D[np.arange(S), srcs].sum() - total)
     loads = ecmp_link_loads(table, routing.dist, routing.sigma, served,
-                            chunk=chunk)
+                            chunk=chunk, backend=backend)
     hops_weighted = float((served * np.maximum(routing.dist, 0)).sum())
     load_sum = float(loads.sum())
+    # conservation holds per source row, so check it *before* the n/S scale
+    conservation = abs(load_sum - hops_weighted) / max(hops_weighted, 1e-12)
+    loads = loads * scale
     max_load = float(loads.max()) if loads.size else 0.0
     loaded = loads[loads > 0]
     return TrafficResult(
-        name=name, pattern=pattern, n=n, total_demand=total,
-        dropped_demand=dropped,
+        name=name, pattern=pattern, n=n, total_demand=total * scale,
+        dropped_demand=dropped * scale,
         avg_hops=hops_weighted / total if total > 0 else 0.0,
         link_loads=loads, max_link_load=max_load,
         mean_link_load=float(loaded.mean()) if loaded.size else 0.0,
         saturation_throughput=1.0 / max_load if max_load > 0 else float("inf"),
-        conservation_error=abs(load_sum - hops_weighted)
-        / max(hops_weighted, 1e-12),
-        seconds=time.time() - t0)
+        conservation_error=conservation,
+        seconds=time.time() - t0,
+        exact=routing.exact, sample_correction=scale)
 
 
 def spectral_throughput_estimate(n: int, rho2: float) -> float:

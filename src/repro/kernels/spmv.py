@@ -1,0 +1,256 @@
+"""Universal padded gather-table spmv: one matvec, every engine, two backends.
+
+Every hot path in the repo applies the same operator family through the
+padded gather-table contract (``graphs.Topology.gather_operands``):
+
+    (A x)[i] = sum_j  signs[i, j] * x[table[i, j]]  +  loops[i] * x[i]
+
+with ``signs`` defaulting to all-ones (plain adjacency; the signed form is
+the Bilu–Linial operator of the synthesis subsystem) and ``loops`` to zero.
+This module is the single dispatch point for that operator:
+
+* :func:`spmv_ref`    — pure-jnp reference (gather + sum), any backend;
+* :func:`spmv_padded` — the Pallas kernel, generalized from
+  ``kernels/cayley_spmv``: x fully in VMEM, (n, k) table (and optional
+  per-slot signs) streamed in row blocks, k unrolled gathers per block;
+* :func:`spmv`        — backend dispatcher.  The *kernel* is the default
+  wherever Pallas can compile (TPU/GPU); on CPU — where Mosaic refuses
+  compiled mode — the dispatcher falls back to :func:`spmv_ref`, and
+  interpret-mode Pallas stays available for parity tests.
+
+Backend resolution order: explicit ``backend=`` argument >
+:func:`use_backend` context override > ``REPRO_SPMV_BACKEND`` env var >
+auto (``"pallas"`` off-CPU, ``"ref"`` on CPU).  The engines thread the
+resolved backend through their jitted solvers as a static argument, so a
+:func:`use_backend` override retraces them (the context manager clears the
+jit caches on entry and exit for exactly this reason).
+
+:func:`kernel_trace_count` counts Pallas-kernel *traces* since the last
+:func:`reset_kernel_trace_count` — the observable the call-counting tests
+use to prove an engine actually routed its matvecs through the kernel
+(clear the jit caches first; a cache hit never re-traces).
+"""
+from __future__ import annotations
+
+import contextlib
+import functools
+import os
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = [
+    "BACKENDS", "spmv", "spmv_ref", "spmv_padded", "spmv_matvec",
+    "default_backend", "resolve_backend", "use_backend", "pallas_supported",
+    "kernel_backend", "kernel_trace_count", "reset_kernel_trace_count",
+]
+
+#: "ref" = pure jnp gather+sum; "pallas" = compiled kernel (TPU/GPU);
+#: "pallas_interpret" = the kernel under the Pallas interpreter (any backend,
+#: slow — parity tests and CPU smoke only).
+BACKENDS = ("ref", "pallas", "pallas_interpret")
+
+_OVERRIDE: Optional[str] = None
+_COUNTS = {"pallas": 0}
+
+
+def pallas_supported() -> bool:
+    """True where Mosaic can *compile* the kernel (CPU only interprets)."""
+    return jax.default_backend() != "cpu"
+
+
+def kernel_backend() -> str:
+    """The strongest kernel-exercising backend available here: compiled
+    Pallas off-CPU, interpret mode on CPU (slow but faithful)."""
+    return "pallas" if pallas_supported() else "pallas_interpret"
+
+
+def _validate(backend: str) -> str:
+    if backend not in BACKENDS:
+        raise ValueError(f"unknown spmv backend {backend!r} "
+                         f"(known: {BACKENDS})")
+    return backend
+
+
+def default_backend() -> str:
+    """Ambient default: env ``REPRO_SPMV_BACKEND`` if set, else the kernel
+    where it compiles (TPU/GPU) and the reference path on CPU."""
+    env = os.environ.get("REPRO_SPMV_BACKEND")
+    if env:
+        return _validate(env)
+    return "pallas" if pallas_supported() else "ref"
+
+
+def resolve_backend(backend: Optional[str] = None) -> str:
+    """Explicit argument > :func:`use_backend` override > ambient default."""
+    if backend is not None:
+        return _validate(backend)
+    if _OVERRIDE is not None:
+        return _OVERRIDE
+    return default_backend()
+
+
+@contextlib.contextmanager
+def use_backend(backend: str):
+    """Force every default-resolved spmv onto ``backend`` inside the block.
+
+    Clears the jit caches on entry AND exit: the engines bake the resolved
+    backend into their traces as a static argument, so cached traces from
+    another backend must not be replayed under this one.
+    """
+    global _OVERRIDE
+    _validate(backend)
+    prev = _OVERRIDE
+    _OVERRIDE = backend
+    jax.clear_caches()
+    try:
+        yield
+    finally:
+        _OVERRIDE = prev
+        jax.clear_caches()
+
+
+def kernel_trace_count() -> int:
+    """Pallas-kernel traces since the last reset (not calls: a jit cache hit
+    replays a trace without re-entering Python)."""
+    return _COUNTS["pallas"]
+
+
+def reset_kernel_trace_count() -> None:
+    _COUNTS["pallas"] = 0
+
+
+# --------------------------------------------------------------------------
+# reference path
+# --------------------------------------------------------------------------
+
+def spmv_ref(x: jnp.ndarray, table: jnp.ndarray,
+             loops: Optional[jnp.ndarray] = None,
+             signs: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """Pure-jnp reference: ``sum_j signs[i,j] * x[table[i,j]] + loops[i]*x[i]``."""
+    g = x[table]
+    if signs is not None:
+        g = g * signs
+    y = jnp.sum(g, axis=1)
+    if loops is not None:
+        y = y + loops * x
+    return y
+
+
+# --------------------------------------------------------------------------
+# Pallas kernel (generalized cayley_spmv: optional per-slot signs, f32/f64
+# accumulation chosen by the input dtype, bf16 in/out supported)
+# --------------------------------------------------------------------------
+
+def _acc_dtype(dtype) -> jnp.dtype:
+    return jnp.float64 if dtype == jnp.float64 else jnp.float32
+
+
+def _plain_kernel(x_ref, tab_ref, loops_ref, o_ref):
+    x = x_ref[...]                               # (n,) full vector in VMEM
+    idx = tab_ref[...]                           # (block_rows, k)
+    acc_dt = _acc_dtype(x.dtype)
+    acc = jnp.zeros(o_ref.shape, acc_dt)
+    for j in range(idx.shape[1]):                # k unrolled gathers
+        acc = acc + jnp.take(x, idx[:, j], axis=0).astype(acc_dt)
+    i0 = pl.program_id(0) * o_ref.shape[0]
+    rows = i0 + jax.lax.broadcasted_iota(jnp.int32, o_ref.shape, 0)
+    acc = acc + loops_ref[...].astype(acc_dt) * jnp.take(x, rows, axis=0)
+    o_ref[...] = acc.astype(o_ref.dtype)
+
+
+def _signed_kernel(x_ref, tab_ref, sg_ref, loops_ref, o_ref):
+    x = x_ref[...]
+    idx = tab_ref[...]
+    sg = sg_ref[...]                             # (block_rows, k) per-slot signs
+    acc_dt = _acc_dtype(x.dtype)
+    acc = jnp.zeros(o_ref.shape, acc_dt)
+    for j in range(idx.shape[1]):
+        acc = acc + sg[:, j].astype(acc_dt) * \
+            jnp.take(x, idx[:, j], axis=0).astype(acc_dt)
+    i0 = pl.program_id(0) * o_ref.shape[0]
+    rows = i0 + jax.lax.broadcasted_iota(jnp.int32, o_ref.shape, 0)
+    acc = acc + loops_ref[...].astype(acc_dt) * jnp.take(x, rows, axis=0)
+    o_ref[...] = acc.astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
+def spmv_padded(x: jnp.ndarray, table: jnp.ndarray,
+                loops: Optional[jnp.ndarray] = None,
+                signs: Optional[jnp.ndarray] = None, *,
+                block_rows: int = 1024,
+                interpret: bool = True) -> jnp.ndarray:
+    """The Pallas padded gather-table spmv.
+
+    ``x``: (n,); ``table``: (n, k) int32 self-padded neighbor table;
+    ``loops``: optional (n,) self-loop weights (padding compensation);
+    ``signs``: optional (n, k) per-slot ±1 signs (signed adjacency).
+    Ragged ``n % block_rows`` is handled by padding the streamed operands
+    (padded rows gather into live x entries but are sliced off the output).
+    """
+    _COUNTS["pallas"] += 1                       # trace-time: counts kernel traces
+    n, k = table.shape
+    if loops is None:
+        loops = jnp.zeros((n,), x.dtype)
+    block_rows = min(block_rows, n)
+    nb = -(-n // block_rows)
+    pad = nb * block_rows - n
+    tab, lps, sg = table, loops, signs
+    if pad:
+        tab = jnp.pad(table, ((0, pad), (0, 0)))        # pads gather index 0
+        lps = jnp.pad(loops, (0, pad))
+        if sg is not None:
+            sg = jnp.pad(signs, ((0, pad), (0, 0)))
+    row_spec = pl.BlockSpec((block_rows, k), lambda i: (i, 0))
+    in_specs = [pl.BlockSpec((n,), lambda i: (0,)), row_spec]
+    ops = [x, tab.astype(jnp.int32)]
+    kernel = _plain_kernel
+    if sg is not None:
+        kernel = _signed_kernel
+        in_specs.append(row_spec)
+        ops.append(sg)
+    in_specs.append(pl.BlockSpec((block_rows,), lambda i: (i,)))
+    ops.append(lps)
+    out = pl.pallas_call(
+        kernel,
+        grid=(nb,),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((block_rows,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((nb * block_rows,), x.dtype),
+        interpret=interpret,
+    )(*ops)
+    return out[:n]
+
+
+# --------------------------------------------------------------------------
+# dispatch
+# --------------------------------------------------------------------------
+
+def spmv(x: jnp.ndarray, table: jnp.ndarray,
+         loops: Optional[jnp.ndarray] = None,
+         signs: Optional[jnp.ndarray] = None, *,
+         backend: Optional[str] = None,
+         block_rows: int = 1024) -> jnp.ndarray:
+    """Apply the padded gather-table operator through the resolved backend."""
+    b = resolve_backend(backend)
+    if b == "ref":
+        return spmv_ref(x, table, loops, signs)
+    return spmv_padded(x, table, loops, signs, block_rows=block_rows,
+                       interpret=(b == "pallas_interpret"))
+
+
+def spmv_matvec(table, loops=None, *, backend: Optional[str] = None
+                ) -> Callable[[jnp.ndarray], jnp.ndarray]:
+    """Adjacency-operator closure over one (n, k) table — the drop-in matvec
+    for :func:`repro.core.spectral.lanczos_tridiag` and friends.  The backend
+    is resolved once, at closure creation."""
+    b = resolve_backend(backend)
+    tab = jnp.asarray(table, dtype=jnp.int32)
+    lw = None if loops is None else jnp.asarray(loops, dtype=jnp.float32)
+
+    def mv(x: jnp.ndarray) -> jnp.ndarray:
+        return spmv(x, tab, lw, backend=b)
+
+    return mv

@@ -4,7 +4,7 @@ from __future__ import annotations
 
 import jax
 
-__all__ = ["make_production_mesh", "make_local_mesh"]
+__all__ = ["make_production_mesh", "make_local_mesh", "shard_batch"]
 
 
 def make_production_mesh(*, multi_pod: bool = False):
@@ -17,3 +17,25 @@ def make_production_mesh(*, multi_pod: bool = False):
 def make_local_mesh(data: int = 1, model: int = 1):
     """Small mesh over whatever devices exist (tests / CPU runs)."""
     return jax.make_mesh((data, model), ("data", "model"))
+
+
+def shard_batch(*arrays):
+    """Shard the leading (batch) axis of each array across local devices.
+
+    The batched Lanczos solvers call this on every (B, ...) operand tile so a
+    multi-device host splits the B independent per-sample recurrences across
+    its devices — jit partitions the vmapped solve along the input sharding
+    with zero cross-device traffic (each sample's Lanczos is independent).
+
+    Identity when only one device exists or B doesn't divide evenly (the
+    tail tile of a chunked solve): sharding must never change results, only
+    placement.  Returns the arrays in order (a single array unwrapped).
+    """
+    ndev = jax.local_device_count()
+    B = arrays[0].shape[0]
+    if ndev > 1 and B % ndev == 0:
+        mesh = jax.make_mesh((ndev,), ("data",))
+        spec = jax.sharding.NamedSharding(
+            mesh, jax.sharding.PartitionSpec("data"))
+        arrays = tuple(jax.device_put(a, spec) for a in arrays)
+    return arrays if len(arrays) > 1 else arrays[0]

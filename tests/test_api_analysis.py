@@ -157,16 +157,17 @@ def test_survey_use_pallas_kernel_matches_default_path():
 def test_survey_use_pallas_kernel_skips_batched_grouping(monkeypatch):
     """Same-shape kernel-routed specs must NOT be pre-solved by the plain
     batched Lanczos grouping — each row's matvec goes through the kernel."""
-    import repro.kernels.cayley_spmv.ops as K
+    from repro.kernels import spmv as KS
 
     calls = {"n": 0}
-    real = K.kernel_matvec
+    real = KS.spmv_matvec
 
-    def counting(tab, w):
+    def counting(tab, loops=None, *, backend=None):
         calls["n"] += 1
-        return real(tab, w)
+        assert backend == KS.kernel_backend()
+        return real(tab, loops, backend=backend)
 
-    monkeypatch.setattr(K, "kernel_matvec", counting)
+    monkeypatch.setattr("repro.api.analysis.KS.spmv_matvec", counting)
     specs = ["random_regular(24,4,0)", "random_regular(24,4,1)"]
     kern = survey(specs, columns=["spec", "backend", "rho2"],
                   dense_threshold=4, use_pallas_kernel=True)

@@ -1,0 +1,313 @@
+"""Statistical contract of the sampled-source routing estimators.
+
+The datacenter-scale path replaces all-sources BFS with
+``analyze_routing(sample_fraction=...)``; these tests pin the contract that
+makes the estimates trustworthy:
+
+* the sampled diameter is a TRUE lower bound on the exact diameter, for
+  every tier-1 bench family, across fractions and seeds;
+* ``sample_fraction=1.0`` reproduces the exact analysis bit-for-bit
+  (same dist/sigma matrices, same summary fields);
+* the 95% bootstrap ``avg_hops_ci`` covers the exact average at >= the
+  nominal rate across seeds (the bootstrap ignores the without-replacement
+  variance reduction, so it is conservative by construction);
+* sampling is deterministic in ``(n, s, seed)`` and cached results never
+  alias across seeds or fractions (Analysis / survey plumbing);
+* the sigma DP accumulates in float64 — the torus(32, 2) antipodal path
+  count exceeds both int32 and float32-exact range (the old overflow).
+
+The n=65536 smoke test runs under ``-m slow`` in its own CI job.
+"""
+import math
+
+import numpy as np
+import pytest
+
+from repro.api import Analysis, build, survey
+from repro.core import routing as R
+from repro.core import traffic as TR
+
+#: the tier-1 bench families (benchmarks/routing_eval.SPECS), all n <= 2184
+TIER1_SPECS = [
+    "lps(13,5)",
+    "slimfly(13)",
+    "torus(16,2)",
+    "hypercube(8)",
+    "ccc(6)",
+    "butterfly(3,4)",
+    "petersen_torus(5,4)",
+    "dragonfly",
+    "random_regular(256,6,0)",
+]
+
+_EXACT_CACHE = {}
+
+
+def _exact(spec):
+    if spec not in _EXACT_CACHE:
+        _EXACT_CACHE[spec] = R.analyze_routing(build(spec))
+    return _EXACT_CACHE[spec]
+
+
+# --------------------------------------------------------------------------
+# sample_sources
+# --------------------------------------------------------------------------
+
+def test_sample_sources_deterministic_and_sorted():
+    a = R.sample_sources(100, 17, seed=4)
+    b = R.sample_sources(100, 17, seed=4)
+    c = R.sample_sources(100, 17, seed=5)
+    assert np.array_equal(a, b)
+    assert not np.array_equal(a, c)
+    assert np.array_equal(a, np.sort(a))
+    assert np.unique(a).size == 17
+    assert a.min() >= 0 and a.max() < 100
+
+
+def test_sample_sources_full_coverage_is_arange():
+    assert np.array_equal(R.sample_sources(50, 50, seed=9), np.arange(50))
+    assert np.array_equal(R.sample_sources(50, 99, seed=9), np.arange(50))
+
+
+def test_sample_sources_rejects_empty():
+    with pytest.raises(ValueError):
+        R.sample_sources(10, 0)
+
+
+# --------------------------------------------------------------------------
+# diameter lower bound + fraction=1.0 exactness, every tier-1 family
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("spec", TIER1_SPECS)
+def test_sampled_diameter_is_true_lower_bound(spec):
+    exact = _exact(spec)
+    for frac, seed in [(0.05, 0), (0.2, 1), (0.5, 2)]:
+        r = R.analyze_routing(build(spec), sample_fraction=frac, seed=seed)
+        assert r.diameter_lb == r.diameter
+        assert r.diameter_lb <= exact.diameter, (spec, frac, seed)
+        assert not r.exact or frac == 1.0
+
+
+@pytest.mark.parametrize("spec", TIER1_SPECS)
+def test_sample_fraction_one_reproduces_exact_bitwise(spec):
+    exact = _exact(spec)
+    r = R.analyze_routing(build(spec), sample_fraction=1.0, seed=123)
+    assert r.exact is True
+    assert np.array_equal(r.sources, exact.sources)
+    assert np.array_equal(r.dist, exact.dist)
+    assert np.array_equal(r.sigma, exact.sigma)
+    assert r.diameter == exact.diameter == r.diameter_lb
+    assert r.avg_path_length == exact.avg_path_length
+    assert np.array_equal(r.hop_histogram, exact.hop_histogram)
+    assert r.path_diversity_mean == exact.path_diversity_mean
+    assert r.unreachable_pairs == exact.unreachable_pairs
+    assert r.avg_hops_ci == (exact.avg_path_length, exact.avg_path_length)
+
+
+# --------------------------------------------------------------------------
+# bootstrap CI coverage
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("spec,frac", [
+    ("random_regular(256,6,0)", 0.25),
+    ("petersen_torus(5,4)", 0.3),
+    ("ccc(6)", 0.25),
+])
+def test_avg_hops_ci_covers_exact_at_nominal_rate(spec, frac):
+    """One-sided binomial test that coverage is >= the nominal 95% rate.
+
+    H0: per-seed coverage >= 0.95.  Over 40 independent seeds the lower
+    0.5%-tail of Binomial(40, 0.95) is 33, so observing <= 33 hits rejects
+    H0 at alpha ~ 0.003; a raw `hits/40 >= 0.95` cut would flake on
+    binomial noise alone (P(hits <= 37 | p=.95) ~ 0.32).  Sources are drawn
+    without replacement while the bootstrap resamples with replacement, so
+    true coverage sits at or above nominal."""
+    topo = build(spec)
+    exact_avg = _exact(spec).avg_path_length
+    seeds = range(40)
+    hits = 0
+    for seed in seeds:
+        r = R.analyze_routing(topo, sample_fraction=frac, seed=seed)
+        lo, hi = r.avg_hops_ci
+        assert lo <= r.avg_path_length <= hi   # estimate inside its own CI
+        hits += lo <= exact_avg <= hi
+    assert hits >= 34, f"{spec}: coverage {hits}/40 rejects nominal 95%"
+
+
+def test_vertex_transitive_ci_degenerates_to_truth():
+    """Every source of a vertex-transitive graph has the same hop profile, so
+    any sample is exact in expectation and the CI collapses onto it."""
+    exact = _exact("hypercube(8)")
+    r = R.analyze_routing(build("hypercube(8)"), sample_fraction=0.1, seed=3)
+    lo, hi = r.avg_hops_ci
+    assert lo == pytest.approx(exact.avg_path_length, rel=1e-12)
+    assert hi == pytest.approx(exact.avg_path_length, rel=1e-12)
+
+
+# --------------------------------------------------------------------------
+# sigma float64 (the int32/float32 overflow regression)
+# --------------------------------------------------------------------------
+
+def test_sigma_survives_overflow_on_torus32():
+    """torus(32, 2): the antipodal pair has 4 * C(32, 16) minimal paths
+    (two shortest directions per even cycle x interleavings).  That count
+    exceeds int32 AND is not float32-representable — the old accumulator
+    could not return it.  One BFS source suffices to pin it."""
+    want = 4 * math.comb(32, 16)            # 2,404,321,560
+    assert want > 2 ** 31                   # int32 would overflow
+    assert float(np.float32(want)) != want  # float32 would round
+    topo = build("torus(32,2)")
+    tab, _ = topo.gather_operands()
+    dist = R.bfs_distances(tab, sources=[0])
+    sigma = R.shortest_path_counts(tab, dist)
+    antipode = 16 * 32 + 16                 # (16, 16) in row-major (32, 32)
+    assert sigma[0, antipode] == want
+
+
+def test_sigma_still_exact_small():
+    """The float64 DP reproduces the known hypercube central count d!."""
+    topo = build("hypercube(6)")
+    tab, _ = topo.gather_operands()
+    dist = R.bfs_distances(tab, sources=[0])
+    sigma = R.shortest_path_counts(tab, dist)
+    assert sigma[0, 63] == math.factorial(6)
+
+
+# --------------------------------------------------------------------------
+# seed determinism + cache-key isolation (Analysis / survey)
+# --------------------------------------------------------------------------
+
+def test_analyze_routing_deterministic_in_seed():
+    topo = build("random_regular(128,4,0)")
+    a = R.analyze_routing(topo, sample_fraction=0.25, seed=11)
+    b = R.analyze_routing(topo, sample_fraction=0.25, seed=11)
+    assert np.array_equal(a.sources, b.sources)
+    assert np.array_equal(a.dist, b.dist)
+    assert a.avg_hops_ci == b.avg_hops_ci
+    c = R.analyze_routing(topo, sample_fraction=0.25, seed=12)
+    assert not np.array_equal(a.sources, c.sources)
+
+
+def test_analyze_routing_rejects_sources_plus_fraction():
+    topo = build("torus(4,2)")
+    with pytest.raises(ValueError):
+        R.analyze_routing(topo, sources=[0, 1], sample_fraction=0.5)
+    with pytest.raises(ValueError):
+        R.analyze_routing(topo, sample_fraction=0.0)
+    with pytest.raises(ValueError):
+        R.analyze_routing(topo, sample_fraction=1.5)
+
+
+def test_analysis_routing_cache_keys_dont_alias():
+    a = Analysis("random_regular(128,4,0)", seed=0)
+    exact = a.routing()
+    s1 = a.routing(sample_fraction=0.25, seed=1)
+    s2 = a.routing(sample_fraction=0.25, seed=2)
+    s3 = a.routing(sample_fraction=0.5, seed=1)
+    # same config returns the SAME cached object; different configs never do
+    assert a.routing() is exact
+    assert a.routing(sample_fraction=0.25, seed=1) is s1
+    assert s1 is not s2 and s1 is not s3 and s2 is not s3
+    assert not np.array_equal(s1.sources, s2.sources)
+    assert s1.sources.size != s3.sources.size
+    # default seed is the session's
+    d = a.routing(sample_fraction=0.25)
+    assert d is a.routing(sample_fraction=0.25, seed=0)
+
+
+def test_analysis_traffic_cache_keys_dont_alias():
+    a = Analysis("random_regular(128,4,0)", seed=0)
+    t_exact = a.traffic("uniform")
+    t1 = a.traffic("uniform", sample_fraction=0.25, seed=1)
+    t2 = a.traffic("uniform", sample_fraction=0.25, seed=2)
+    assert a.traffic("uniform") is t_exact
+    assert a.traffic("uniform", sample_fraction=0.25, seed=1) is t1
+    assert t1 is not t2
+    assert t_exact.exact is True and t1.exact is False
+    assert t1.sample_correction == pytest.approx(4.0)
+
+
+def test_survey_threads_sampled_routing_config():
+    rows = survey(["random_regular(128,4,0)"],
+                  ["instance", "diameter_bfs", "diameter_lb", "avg_hops",
+                   "avg_hops_ci"],
+                  routing=dict(sample_fraction=0.25, seed=7)).rows
+    row = rows[0]
+    exact = R.analyze_routing(build("random_regular(128,4,0)"))
+    assert row["diameter_lb"] <= exact.diameter
+    lo, hi = row["avg_hops_ci"]
+    assert lo <= row["avg_hops"] <= hi
+    # same seed reproduces the row; a different seed may not
+    again = survey(["random_regular(128,4,0)"],
+                   ["instance", "avg_hops", "avg_hops_ci"],
+                   routing=dict(sample_fraction=0.25, seed=7)).rows[0]
+    assert again["avg_hops"] == row["avg_hops"]
+    assert again["avg_hops_ci"] == row["avg_hops_ci"]
+
+
+def test_survey_sampled_diameter_ok_means_lower_bound():
+    """With a registered closed form, sampled diameter_ok asserts LB <= truth
+    (not equality — the sample may miss the eccentric pair)."""
+    rows = survey(["hypercube(8)"],
+                  ["instance", "diameter_bfs", "diameter_ok"],
+                  routing=dict(sample_fraction=0.05, seed=0)).rows
+    assert rows[0]["diameter_ok"] is True
+
+
+def test_sampled_traffic_unbiased_on_uniform():
+    """Scaled sampled loads average to the exact loads over seeds (unbiased
+    estimator of the per-link census) on a non-transitive family."""
+    topo = build("random_regular(64,4,1)")
+    exact_r = R.analyze_routing(topo)
+    exact_t = TR.evaluate_traffic(topo, "uniform", routing=exact_r)
+    acc = np.zeros_like(exact_t.link_loads)
+    seeds = range(24)
+    for seed in seeds:
+        r = R.analyze_routing(topo, sample_fraction=0.25, seed=seed)
+        acc += TR.evaluate_traffic(topo, "uniform", routing=r).link_loads
+    mean = acc / len(list(seeds))
+    # mean over 24 disjoint-ish samples approaches the census; loose tol
+    assert np.abs(mean - exact_t.link_loads).max() < \
+        0.35 * exact_t.max_link_load
+
+
+def test_demand_rows_matches_demand_matrix_all_patterns():
+    n = 64
+    fied = np.sin(np.arange(n) * 0.37)
+    srcs = np.array([0, 3, 17, 63])
+    for pattern in TR.TRAFFIC_PATTERNS:
+        kw = dict(fiedler=fied) if pattern == "adversarial" else {}
+        D = TR.demand_matrix(pattern, n, **kw)
+        rows = TR.demand_rows(pattern, n, srcs, **kw)
+        assert np.array_equal(rows, D[srcs]), pattern
+        full = TR.demand_rows(pattern, n, np.arange(n), **kw)
+        assert np.array_equal(full, D), pattern
+
+
+# --------------------------------------------------------------------------
+# n=65536 smoke (dedicated CI job; excluded from tier-1 via the slow marker)
+# --------------------------------------------------------------------------
+
+@pytest.mark.slow
+def test_full_survey_row_at_65536():
+    """One complete survey row — rho2 + sampled routing + sampled traffic —
+    at n=65536 (hypercube(16): cheap to build, diameter/avg-hops known in
+    closed form, so every estimate is checked against ground truth)."""
+    topo = build("hypercube(16)")
+    assert topo.n == 65536
+    a = Analysis(topo, lanczos_iters=48, seed=0)
+    rho2 = a.rho2
+    assert rho2 == pytest.approx(2.0, abs=5e-3)
+    r = a.routing(sample_fraction=64 / 65536, seed=0)
+    assert r.exact is False and r.sources.size == 64
+    assert r.diameter_lb <= 16
+    # vertex-transitive: any source sees the full eccentricity profile
+    assert r.diameter_lb == 16
+    exact_avg = 16 * 32768 / 65535    # sum_d d*C(16,d) / (2^16 - 1)
+    lo, hi = r.avg_hops_ci
+    assert lo <= exact_avg <= hi
+    assert r.avg_path_length == pytest.approx(exact_avg, rel=1e-6)
+    t = a.traffic("uniform", sample_fraction=64 / 65536, seed=0)
+    assert t.exact is False
+    assert t.conservation_error < 1e-4
+    assert t.total_demand == pytest.approx(topo.n, rel=1e-3)
