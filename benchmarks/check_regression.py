@@ -52,7 +52,25 @@ GATES = {
     "BENCH_routing.json": dict(
         correctness=["correctness.cases",
                      "correctness.all_diameters_match_closed_forms",
-                     "correctness.load_conservation_ok", "families"],
+                     "correctness.load_conservation_ok",
+                     # canonical-Fiedler adversarial throughput per family:
+                     # exact-match gated so tie-sensitive eigensolver drift
+                     # (the PR-8 butterfly regression) can never recur
+                     "correctness.thpt_adversarial", "families"],
+        timings=["total_seconds"],
+    ),
+    "BENCH_routing_schemes.json": dict(
+        correctness=["correctness.cases", "families", "schemes",
+                     "correctness.mcf_available",
+                     "correctness.backend_probe"],
+        # the PR-9 acceptance set: non-minimal routing recovers adversarial
+        # throughput on every expander family, no scheme beats the LP
+        # optimal-routing ceiling, and the adversarial demand is bit-stable
+        # across spmv backends — all must hold in the CURRENT payload
+        required_true=[
+            "correctness.nonminimal_wins_adversarial_on_expanders",
+            "correctness.all_schemes_leq_mcf_ub",
+            "correctness.adversarial_backend_bitwise"],
         timings=["total_seconds"],
     ),
     "BENCH_synthesis.json": dict(

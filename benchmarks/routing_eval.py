@@ -118,6 +118,11 @@ def run(out_json: str = "benchmarks/out/BENCH_routing.json",
             cases=len(SPECS),
             all_diameters_match_closed_forms=bool(diameters_ok),
             load_conservation_ok=bool(conservation_ok),
+            # the adversarial pattern is built on the *canonical* Fiedler
+            # vector (deterministic on degenerate eigenspaces), so its
+            # throughput is reproducible and gated exactly per family
+            thpt_adversarial={row["spec"]: row["thpt_adversarial"]
+                              for row in table},
         ),
         routing_table=table,
         details=details,

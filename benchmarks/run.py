@@ -76,6 +76,15 @@ def _run_routing_eval():
            % all(r["diameter_ok"] is not False for r in rows))
 
 
+def _run_routing_schemes():
+    from . import routing_schemes
+
+    _timed("routing_schemes_vs_mcf_ceiling", routing_schemes.run,
+           lambda rows: "min_gap_to_opt=%.3f"
+           % min(r["gap_to_opt_adv"] for r in rows
+                 if r["gap_to_opt_adv"] is not None))
+
+
 def _run_synthesis_frontier():
     from . import synthesis_frontier
 
@@ -144,6 +153,7 @@ BENCHES: Dict[str, Tuple[Callable[[], None], str]] = {
     "table1": (_run_table1, "BENCH_survey.json"),
     "fault_sweep": (_run_fault_sweep, "BENCH_faults.json"),
     "routing_eval": (_run_routing_eval, "BENCH_routing.json"),
+    "routing_schemes": (_run_routing_schemes, "BENCH_routing_schemes.json"),
     "synthesis_frontier": (_run_synthesis_frontier, "BENCH_synthesis.json"),
     "collective_sim": (_run_collective_sim, "BENCH_simulate.json"),
     "workloads": (_run_workload_sim, "BENCH_workloads.json"),

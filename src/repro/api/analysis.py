@@ -153,11 +153,19 @@ class Analysis:
 
     @cached_property
     def fiedler(self) -> np.ndarray:
-        """Fiedler vector: exact (dense) or top-Ritz approximation (Lanczos)."""
+        """Canonical Fiedler vector: deterministic across eigensolver paths.
+
+        Routed through :func:`repro.core.spectral.canonical_fiedler`, so on
+        degenerate Fiedler eigenspaces (butterfly, torus, ...) every backend
+        — dense eigh, Lanczos, any BLAS build — yields the *same* vector at
+        dense-tractable sizes, keeping tie-sensitive consumers (the
+        adversarial traffic pattern) backend-invariant.
+        """
         if self.backend == "dense":
-            return S.fiedler_vector(self.topo)
-        return S.fiedler_lanczos(self.topo, iters=self.lanczos_iters,
-                                 seed=self.seed)
+            return S.canonical_fiedler(self.topo)
+        vec = S.fiedler_lanczos(self.topo, iters=self.lanczos_iters,
+                                seed=self.seed)
+        return S.canonical_fiedler(self.topo, vec)
 
     @cached_property
     def bisection_mask(self) -> np.ndarray:
@@ -268,32 +276,55 @@ class Analysis:
         return cache[key]
 
     def traffic(self, pattern: str = "uniform", *,
+                scheme: str = "minimal",
+                slack: int = 1,
                 sample_fraction: Optional[float] = None,
                 seed: Optional[int] = None) -> "TR.TrafficResult":
-        """ECMP link-load accounting of one synthetic pattern (lazy, cached).
+        """Link-load accounting of one synthetic pattern (lazy, cached).
 
         Routes the named demand pattern (see
-        :data:`repro.core.traffic.TRAFFIC_PATTERNS`) over all minimal paths
-        with equal splitting, reusing this session's cached :meth:`routing`
-        matrices and (for ``adversarial``) Fiedler vector.  With
+        :data:`repro.core.traffic.TRAFFIC_PATTERNS`) under the chosen
+        ``scheme`` (:data:`repro.core.traffic.ROUTING_SCHEMES`: minimal
+        ECMP, Valiant, UGAL, or k-shortest-path with ``slack`` extra hops),
+        reusing this session's cached :meth:`routing` matrices and (for
+        ``adversarial``) canonical Fiedler vector.  With
         ``sample_fraction``, only the sampled source rows are routed and the
         loads carry the n/S unbiasedness correction (see
         :func:`repro.core.traffic.evaluate_traffic`); cache entries key on
-        ``(pattern, sample_fraction, seed)``.
+        ``(pattern, scheme, slack, sample_fraction, seed)``.
 
         Returns:
             :class:`repro.core.traffic.TrafficResult` — per-directed-link
             loads in injection units, max load, saturation throughput.
         """
         cache = self.__dict__.setdefault("_traffic", {})
-        key = (pattern,) + self._routing_key(sample_fraction, seed)
+        key = (pattern, scheme, int(slack)) + \
+            self._routing_key(sample_fraction, seed)
         if key not in cache:
             fiedler = self.fiedler if pattern == "adversarial" else None
             cache[key] = TR.evaluate_traffic(
-                self.topo, pattern,
+                self.topo, pattern, scheme=scheme, slack=slack,
                 routing=self.routing(sample_fraction=sample_fraction,
                                      seed=seed),
                 fiedler=fiedler)
+        return cache[key]
+
+    def mcf_throughput_ub(self, pattern: str = "uniform", *,
+                          groups: Optional[int] = None) -> float:
+        """Multi-commodity-flow LP throughput ceiling (lazy, cached).
+
+        The grouped-commodity LP upper bound of
+        :func:`repro.core.traffic.mcf_throughput_ub` for this topology and
+        pattern — the optimality ceiling every measured scheme's
+        ``saturation_throughput`` is compared against (``thpt_gap_to_opt``
+        in the survey).  Raises ``RuntimeError`` when scipy is unavailable.
+        """
+        cache = self.__dict__.setdefault("_mcf", {})
+        key = (pattern, groups)
+        if key not in cache:
+            fiedler = self.fiedler if pattern == "adversarial" else None
+            cache[key] = TR.mcf_throughput_ub(
+                self.topo, pattern, fiedler=fiedler, groups=groups)
         return cache[key]
 
     # -- executed schedules (link-level simulation) ------------------------
@@ -320,7 +351,9 @@ class Analysis:
                  placement: str = "linear",
                  link_bw: float = C.LINK_BW,
                  hop_latency: float = C.PER_HOP_LATENCY,
-                 root: int = 0) -> Any:
+                 root: int = 0,
+                 scheme: str = "minimal",
+                 slack: int = 1) -> Any:
         """Execute a collective algorithm or traffic workload on the links
         (lazy, cached per configuration).
 
@@ -355,6 +388,12 @@ class Analysis:
                 :class:`~repro.core.collectives.NetworkModel`, so
                 ``network_model().validate(...)`` is apples-to-apples).
             root: broadcast root vertex.
+            scheme: routing scheme for the link lowering — ``minimal``
+                (ECMP, default), ``valiant``, ``ugal`` or ``ksp`` (see
+                :data:`repro.core.traffic.ROUTING_SCHEMES`).  Applies to
+                traffic workloads and demand-lowered collectives;
+                ``workload=`` runs always use minimal ECMP.
+            slack: extra hops beyond shortest for ``scheme="ksp"``.
 
         Returns:
             :class:`repro.core.simulate.SimulationResult` — measured times
@@ -394,19 +433,20 @@ class Analysis:
                                  f"{sorted(SM.SIM_ALGORITHMS)} + 'traffic')")
             algorithm = algorithm or SM.SIM_ALGORITHMS[collective][0]
         key = (collective, algorithm, pay, pattern, link_bw, hop_latency,
-               root)
+               root, scheme, int(slack))
         if key not in cache:
             if collective == "traffic":
                 fiedler = self.fiedler if pattern == "adversarial" else None
                 cache[key] = SM.simulate_traffic(
                     self.topo, pattern, payloads=pay, link_bw=link_bw,
                     hop_latency=hop_latency, routing=self.routing(),
-                    fiedler=fiedler)
+                    fiedler=fiedler, scheme=scheme, slack=slack)
             else:
                 cache[key] = SM.simulate_collective(
                     self.topo, collective, algorithm, payloads=pay,
                     link_bw=link_bw, hop_latency=hop_latency,
-                    routing=self.routing(), root=root)
+                    routing=self.routing(), root=root, scheme=scheme,
+                    slack=slack)
         return cache[key]
 
     # -- degraded operation (fault tolerance, §3) --------------------------

@@ -105,11 +105,20 @@ FAULT_COLUMNS = [
 #: its 95% bootstrap CI (degenerate when exact), mean minimal-path count per
 #: pair, max directed link load (injection units) and saturation throughput
 #: under the configured traffic pattern, and the spectral throughput
-#: prediction.
+#: prediction.  ``routing={"schemes": True}`` additionally fills the
+#: routing-scheme comparison: saturation throughput under Valiant load
+#: balancing (``thpt_valiant``), UGAL-style adaptive selection
+#: (``thpt_ugal``) and k-shortest-path non-minimal ECMP (``thpt_ksp``),
+#: the multi-commodity-flow optimal-routing ceiling (``thpt_mcf_ub``, None
+#: when scipy is unavailable), and ``thpt_gap_to_opt`` — the best measured
+#: scheme as a fraction of that ceiling (1.0 = routing achieves the
+#: topology's optimum; the residual gap is the routing loss, separating it
+#: from the spectral/topological limit).
 ROUTING_COLUMNS = [
     "diameter_bfs", "diameter_lb", "diameter_ok", "avg_hops", "avg_hops_ci",
     "path_diversity", "traffic_pattern", "max_link_load",
-    "saturation_throughput", "throughput_spectral",
+    "saturation_throughput", "throughput_spectral", "thpt_valiant",
+    "thpt_ugal", "thpt_ksp", "thpt_mcf_ub", "thpt_gap_to_opt",
 ]
 
 #: executed-schedule columns appended when ``survey(simulate=...)``: the
@@ -292,6 +301,9 @@ def _routing_config(routing: Union[bool, Dict[str, Any]]) -> Dict[str, Any]:
     cfg.setdefault("pattern", "uniform")
     cfg.setdefault("sample_fraction", None)   # None = exact all-sources BFS
     cfg.setdefault("seed", None)              # None = the session's seed
+    cfg.setdefault("schemes", False)          # fill the thpt_* comparison
+    cfg.setdefault("slack", 1)                # ksp detour budget
+    cfg.setdefault("groups", None)            # MCF commodity grouping
     return cfg
 
 
@@ -348,6 +360,27 @@ def _routing_values(a: Analysis, cfg: Dict[str, Any]) -> Dict[str, Any]:
     diameter_ok = None if not cf or "diameter" not in cf \
         else bool(r.diameter == int(cf["diameter"])) if r.exact \
         else bool(r.diameter_lb <= int(cf["diameter"]))
+    schemes: Dict[str, Optional[float]] = dict(
+        thpt_valiant=None, thpt_ugal=None, thpt_ksp=None, thpt_mcf_ub=None,
+        thpt_gap_to_opt=None)
+    if cfg["schemes"]:
+        measured = {"minimal": t.saturation_throughput}
+        for scheme in ("valiant", "ugal", "ksp"):
+            measured[scheme] = a.traffic(
+                cfg["pattern"], scheme=scheme, slack=cfg["slack"],
+                sample_fraction=cfg["sample_fraction"],
+                seed=cfg["seed"]).saturation_throughput
+        schemes.update(thpt_valiant=_round(measured["valiant"], 4),
+                       thpt_ugal=_round(measured["ugal"], 4),
+                       thpt_ksp=_round(measured["ksp"], 4))
+        try:
+            ub = a.mcf_throughput_ub(cfg["pattern"], groups=cfg["groups"])
+        except RuntimeError:     # scipy not installed: no ceiling, no gap
+            ub = None
+        if ub is not None and np.isfinite(ub) and ub > 0:
+            best = max(v for v in measured.values() if np.isfinite(v))
+            schemes.update(thpt_mcf_ub=_round(ub, 4),
+                           thpt_gap_to_opt=_round(best / ub, 4))
     return dict(
         diameter_bfs=r.diameter,
         diameter_lb=r.diameter_lb,
@@ -360,6 +393,7 @@ def _routing_values(a: Analysis, cfg: Dict[str, Any]) -> Dict[str, Any]:
         saturation_throughput=_round(t.saturation_throughput, 4),
         throughput_spectral=_round(
             spectral_throughput_estimate(a.n, a.rho2), 4),
+        **schemes,
     )
 
 
@@ -425,6 +459,11 @@ def survey(specs: Sequence[Union[str, Topology, Analysis]],
     then the certified lower bound ``diameter_lb``, ``avg_hops_ci`` its
     bootstrap CI, and traffic loads carry the n/S correction — the
     datacenter-scale path (``sample_fraction=1.0`` reproduces exact).
+    ``routing=dict(schemes=True)`` additionally evaluates the non-minimal /
+    adaptive routing schemes and the MCF optimal-routing ceiling, filling
+    ``thpt_valiant`` / ``thpt_ugal`` / ``thpt_ksp`` / ``thpt_mcf_ub`` /
+    ``thpt_gap_to_opt`` (config keys ``slack`` and ``groups`` tune the ksp
+    detour budget and MCF commodity grouping).
 
     ``simulate``: ``True`` or a config dict (``simulate=dict(collective=
     "all_reduce", algorithm="ring", payload=1 << 26, pattern="uniform")``)

@@ -44,7 +44,7 @@ from repro.kernels import spmv as KS
 __all__ = [
     "RoutingResult", "bfs_distances", "shortest_path_counts",
     "analyze_routing", "routing_stats_stacked", "sample_sources",
-    "DEFAULT_SOURCE_CHUNK",
+    "reverse_slot_index", "DEFAULT_SOURCE_CHUNK",
 ]
 
 #: sources per jitted BFS/path-count call — bounds the (chunk, n, k) gather
@@ -174,6 +174,48 @@ def shortest_path_counts(table: np.ndarray, dist: np.ndarray,
                 _sigma_chunk(tab, jnp.asarray(dist[lo:hi]), backend=backend),
                 dtype=np.float64)
     return out
+
+
+def reverse_slot_index(table: np.ndarray) -> np.ndarray:
+    """Slot index of each directed edge's reverse: ``rev[v, j]`` is the slot
+    ``j'`` in row ``u = table[v, j]`` with ``table[u, j'] == v``.
+
+    The padded gather table stores each undirected edge as two directed slots;
+    adaptive routing (UGAL's channel-load lookup) needs the load of the
+    *incoming* link ``u → v`` while iterating slots of ``v``, i.e.
+    ``loads[table[v, j], rev[v, j]]``.  Parallel edges are paired copy-by-copy
+    (the i-th slot of one endpoint with the i-th of the other), self-padded
+    slots map to themselves.  Pure host-side numpy, O(nk log nk).
+    """
+    table = np.asarray(table)
+    n, k = table.shape
+    u = np.repeat(np.arange(n, dtype=np.int64), k)
+    v = table.astype(np.int64).ravel()
+    slots = np.tile(np.arange(k, dtype=np.int64), n)
+    rev = np.empty(n * k, dtype=np.int64)
+    pad = u == v
+    rev[pad] = slots[pad]
+    live = np.flatnonzero(~pad)
+    ul, vl, sl = u[live], v[live], slots[live]
+    lo, hi = np.minimum(ul, vl), np.maximum(ul, vl)
+    # sort into runs per undirected edge {lo, hi}: the low-endpoint copies
+    # first (slot-sorted), then the high-endpoint copies — pairing is then a
+    # half-rotation within each run
+    order = np.lexsort((sl, ul, hi, lo))
+    key = lo[order] * n + hi[order]
+    m = order.size
+    if m:
+        starts = np.flatnonzero(np.r_[True, key[1:] != key[:-1]])
+        sizes = np.diff(np.r_[starts, m])
+        gid = np.cumsum(np.r_[0, key[1:] != key[:-1]])
+        start_of, size_of = starts[gid], sizes[gid]
+        if np.any(size_of % 2):
+            raise ValueError("table is not symmetric: some directed edge "
+                             "has no reverse slot")
+        rank = np.arange(m) - start_of
+        partner = start_of + (rank + size_of // 2) % size_of
+        rev[live[order]] = sl[order[partner]]
+    return rev.reshape(n, k)
 
 
 def sample_sources(n: int, s: int, seed: int = 0) -> np.ndarray:

@@ -50,7 +50,8 @@ from .collectives import LINK_BW, PER_HOP_LATENCY
 from .graphs import Topology
 from .routing import (DEFAULT_SOURCE_CHUNK, RoutingResult, _bfs_dist_chunk,
                       _sigma_chunk, analyze_routing)
-from .traffic import _ecmp_loads_chunk, demand_matrix, ecmp_link_loads
+from .traffic import (ROUTING_SCHEMES, _ecmp_loads_chunk, demand_matrix,
+                      scheme_link_loads)
 
 __all__ = [
     "Schedule", "SimulationResult", "SIM_ALGORITHMS", "compile_schedule",
@@ -196,10 +197,13 @@ def _unpack_topo(topo: Union[Topology, Tuple[np.ndarray, int]]
 
 def _lower_demand_rounds(table: np.ndarray, routing: RoutingResult,
                          logical: List[Tuple[np.ndarray, int, float]],
-                         chunk: int) -> Tuple[np.ndarray, np.ndarray,
-                                              np.ndarray, float]:
-    """ECMP-lower logical (demand, count) rounds onto the gather-table slots."""
-    dist, sigma = routing.dist, routing.sigma
+                         chunk: int, scheme: str = "minimal",
+                         slack: int = 1) -> Tuple[np.ndarray, np.ndarray,
+                                                  np.ndarray, float]:
+    """Lower logical (demand, count) rounds onto the gather-table slots under
+    one of the traffic layer's routing schemes (minimal ECMP by default —
+    Valiant/UGAL/ksp let executed collectives ride non-minimal paths)."""
+    dist = routing.dist
     reachable = dist >= 0
     rounds, counts, hops = [], [], []
     dropped = 0.0
@@ -207,11 +211,11 @@ def _lower_demand_rounds(table: np.ndarray, routing: RoutingResult,
         served = np.where(reachable, D, 0.0)
         np.fill_diagonal(served, 0.0)
         dropped += count * float(D.sum() - np.trace(D) - served.sum())
-        loads = ecmp_link_loads(table, dist, sigma, served, chunk=chunk)
-        pair_hops = np.where(served > 0, dist, 0)
+        loads, _, max_hops = scheme_link_loads(
+            table, routing, served, scheme, slack=slack, chunk=chunk)
         rounds.append(loads.astype(np.float32))
         counts.append(count)
-        hops.append(int(pair_hops.max()) if served.any() else 0)
+        hops.append(int(max_hops))
     return (np.stack(rounds), np.asarray(counts, dtype=np.int32),
             np.asarray(hops, dtype=np.int32), dropped)
 
@@ -251,6 +255,8 @@ def compile_schedule(topo: Union[Topology, Tuple[np.ndarray, int]],
                      algorithm: Optional[str] = None, *,
                      routing: Optional[RoutingResult] = None,
                      root: int = 0,
+                     scheme: str = "minimal",
+                     slack: int = 1,
                      chunk: int = DEFAULT_SOURCE_CHUNK) -> Schedule:
     """Lower one collective algorithm onto a topology's physical links.
 
@@ -265,6 +271,11 @@ def compile_schedule(topo: Union[Topology, Tuple[np.ndarray, int]],
         routing: reuse an all-sources :class:`RoutingResult` (e.g. from a
             lazy Analysis session); computed here when absent.
         root: broadcast root vertex.
+        scheme: routing scheme used to lower each logical round onto links
+            (one of :data:`repro.core.traffic.ROUTING_SCHEMES`).  Non-minimal
+            schemes let executed collectives ride Valiant/UGAL/ksp paths;
+            ``bfs_tree`` schedules are physical trees and ignore it.
+        slack: extra hops beyond shortest for ``scheme="ksp"``.
         chunk: sources per jitted ECMP call (memory knob).
 
     Returns:
@@ -281,6 +292,9 @@ def compile_schedule(topo: Union[Topology, Tuple[np.ndarray, int]],
     if algorithm not in SIM_ALGORITHMS[collective]:
         raise ValueError(f"unknown algorithm {algorithm!r} for {collective} "
                          f"(known: {SIM_ALGORITHMS[collective]})")
+    if scheme not in ROUTING_SCHEMES:
+        raise ValueError(f"unknown routing scheme {scheme!r} "
+                         f"(known: {ROUTING_SCHEMES})")
     if routing is None:
         routing = analyze_routing((table, n), chunk=chunk)
     if not routing.exact:
@@ -302,7 +316,7 @@ def compile_schedule(topo: Union[Topology, Tuple[np.ndarray, int]],
         else:                                          # binomial broadcast
             logical = _logical_rounds_binomial(n, root)
         rounds, counts, hops, dropped = _lower_demand_rounds(
-            table, routing, logical, chunk)
+            table, routing, logical, chunk, scheme=scheme, slack=slack)
     return Schedule(name=name, collective=collective, algorithm=algorithm,
                     n=n, k=int(table.shape[1]), round_bytes=rounds,
                     counts=counts, hops=hops, dropped_demand=dropped)
@@ -499,6 +513,8 @@ def simulate_collective(topo: Union[Topology, Tuple[np.ndarray, int]],
                         hop_latency: float = PER_HOP_LATENCY,
                         routing: Optional[RoutingResult] = None,
                         root: int = 0,
+                        scheme: str = "minimal",
+                        slack: int = 1,
                         chunk: int = DEFAULT_SOURCE_CHUNK) -> SimulationResult:
     """Compile + execute one collective on one topology (see
     :func:`compile_schedule` / :func:`run_schedule` for the arguments).
@@ -510,7 +526,8 @@ def simulate_collective(topo: Union[Topology, Tuple[np.ndarray, int]],
     """
     t0 = time.time()
     sched = compile_schedule(topo, collective, algorithm, routing=routing,
-                             root=root, chunk=chunk)
+                             root=root, scheme=scheme, slack=slack,
+                             chunk=chunk)
     return run_schedule(sched, payloads, link_bw=link_bw,
                         hop_latency=hop_latency, t0=t0)
 
@@ -523,6 +540,8 @@ def simulate_traffic(topo: Union[Topology, Tuple[np.ndarray, int]],
                      routing: Optional[RoutingResult] = None,
                      fiedler: Optional[np.ndarray] = None,
                      demands: Optional[np.ndarray] = None,
+                     scheme: str = "minimal",
+                     slack: int = 1,
                      chunk: int = DEFAULT_SOURCE_CHUNK) -> SimulationResult:
     """Execute one traffic workload: every node injects ``payload`` bytes
     spread per the demand matrix, in one contention round on the links.
@@ -535,7 +554,7 @@ def simulate_traffic(topo: Union[Topology, Tuple[np.ndarray, int]],
     :func:`~repro.core.traffic.spectral_throughput_estimate` ratios both).
 
     Args: as :func:`simulate_collective`, plus ``pattern`` /
-    ``fiedler`` / ``demands`` as in
+    ``fiedler`` / ``demands`` / ``scheme`` / ``slack`` as in
     :func:`repro.core.traffic.evaluate_traffic`.
     """
     t0 = time.time()
@@ -548,9 +567,10 @@ def simulate_traffic(topo: Union[Topology, Tuple[np.ndarray, int]],
         D = np.asarray(demands, dtype=np.float64)
         pattern = "custom"
     rounds, counts, hops, dropped = _lower_demand_rounds(
-        table, routing, [(D, 1, 1.0)], chunk)
+        table, routing, [(D, 1, 1.0)], chunk, scheme=scheme, slack=slack)
     sched = Schedule(name=name, collective=f"traffic:{pattern}",
-                     algorithm="ecmp", n=n, k=int(table.shape[1]),
+                     algorithm="ecmp" if scheme == "minimal" else scheme,
+                     n=n, k=int(table.shape[1]),
                      round_bytes=rounds, counts=counts, hops=hops,
                      dropped_demand=dropped)
     max_load = float(rounds.max())

@@ -32,10 +32,10 @@ from .graphs import Topology
 __all__ = [
     "adjacency_spectrum", "laplacian_spectrum", "normalized_laplacian_spectrum",
     "algebraic_connectivity", "spectral_gap", "lambda_nontrivial",
-    "fiedler_vector", "table_matvec", "lanczos_tridiag", "lanczos_extremes",
-    "lanczos_top_ritz", "rho2_lanczos", "rho2_lanczos_batched",
-    "rho2_laplacian_batched", "signed_extremes_batched", "fiedler_lanczos",
-    "DENSE_THRESHOLD", "DEFAULT_BATCH_TILE_BYTES",
+    "fiedler_vector", "canonical_fiedler", "table_matvec", "lanczos_tridiag",
+    "lanczos_extremes", "lanczos_top_ritz", "rho2_lanczos",
+    "rho2_lanczos_batched", "rho2_laplacian_batched", "signed_extremes_batched",
+    "fiedler_lanczos", "DENSE_THRESHOLD", "DEFAULT_BATCH_TILE_BYTES",
 ]
 
 #: graphs at or below this order use the dense float64 oracle; larger ones go
@@ -103,6 +103,61 @@ def fiedler_vector(topo: Topology) -> np.ndarray:
     """Eigenvector of L for rho_2 (dense path) — the bisection sweep witness."""
     w, v = np.linalg.eigh(topo.laplacian())
     return v[:, 1]
+
+
+def _sign_canonical(vec: np.ndarray, tol: float = 1e-12) -> np.ndarray:
+    """Flip ``vec`` so its first entry with |value| > tol is positive."""
+    nz = np.flatnonzero(np.abs(vec) > tol)
+    if nz.size and vec[nz[0]] < 0:
+        return -vec
+    return vec
+
+
+def canonical_fiedler(topo: Topology, vector: Optional[np.ndarray] = None,
+                      *, tol: float = 1e-6) -> np.ndarray:
+    """A *deterministic* representative of the rho_2 Laplacian eigenspace.
+
+    Symmetric families (butterfly, torus, hypercube, ...) have degenerate
+    Fiedler eigenspaces, so ``eigh``'s second column is an arbitrary rotation
+    within that eigenspace — it differs across BLAS builds and across
+    dense-vs-Lanczos solver paths, which made the tie-sensitive adversarial
+    traffic pattern drift between backends (butterfly ``thpt_adversarial``
+    moved 0.3143 -> 0.3004 purely from an eigensolver path change).
+
+    Dense path (``n <= DENSE_THRESHOLD``): recompute the full eigensystem,
+    select every eigenvector with ``|w - rho_2| <= tol * max(1, |rho_2|)``
+    (excluding the constant mode), and return the normalized projection of a
+    fixed deterministic probe onto that eigenspace.  The projection is
+    basis-invariant, so any eigensolver producing the same eigenspace yields
+    the same vector — the input ``vector`` is ignored here by design.
+
+    Above the dense threshold an exact eigenspace is unavailable; the provided
+    Lanczos ``vector`` is returned sign-canonicalized (approximate invariance:
+    deterministic up to the Lanczos solver's own reproducibility).
+    """
+    n = topo.n
+    if n > DENSE_THRESHOLD:
+        if vector is None:
+            raise ValueError("canonical_fiedler above DENSE_THRESHOLD needs "
+                             "an explicit (Lanczos) vector")
+        vec = np.asarray(vector, dtype=np.float64)
+        nrm = np.linalg.norm(vec)
+        if nrm > 0:
+            vec = vec / nrm
+        return _sign_canonical(vec)
+    w, v = np.linalg.eigh(topo.laplacian())
+    rho2 = w[1]
+    member = np.abs(w - rho2) <= tol * max(1.0, abs(rho2))
+    member[0] = False                      # never the constant mode
+    basis = v[:, member]                   # (n, m) orthonormal eigenspace
+    idx = np.arange(n, dtype=np.float64)
+    probes = [idx / n, np.cos(idx), idx * idx / (n * n)]
+    for probe in probes:
+        rep = basis @ (basis.T @ probe)
+        nrm = np.linalg.norm(rep)
+        if nrm > tol:
+            return _sign_canonical(rep / nrm)
+    return _sign_canonical(v[:, 1])        # probes all orthogonal: fall back
 
 
 # --------------------------------------------------------------------------

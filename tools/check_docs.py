@@ -35,7 +35,8 @@ _LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
 
 DOC_FILES = ["README.md", "docs/architecture.md", "docs/theory.md",
              "docs/api.md", "docs/synthesis.md", "docs/simulation.md",
-             "docs/workloads.md", "docs/scale.md"]
+             "docs/workloads.md", "docs/scale.md",
+             "docs/routing-schemes.md"]
 API_INIT = "src/repro/api/__init__.py"
 SURVEY_MODULE = "src/repro/api/survey.py"
 WORKLOADS_MODULE = "src/repro/core/workloads.py"
