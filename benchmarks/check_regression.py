@@ -130,6 +130,18 @@ GATES = {
                        "correctness.saturation_throughput_positive"],
         timings=["total_seconds"],
     ),
+    "BENCH_obs.json": dict(
+        correctness=["correctness.cases", "correctness.spans_recorded",
+                     "budget_frac", "reps"],
+        # the ISSUE-10 acceptance set: span instrumentation costs < 3% wall
+        # on a warmed workload, enabling tracing perturbs no jit cache, and
+        # per-round telemetry reduces to the static ECMP link load — all
+        # must hold in the CURRENT payload
+        required_true=["correctness.overhead_within_budget",
+                       "correctness.no_unexpected_recompiles",
+                       "correctness.telemetry_matches_static_ecmp"],
+        timings=["total_seconds"],
+    ),
 }
 
 #: timings are not ratio-gated while BOTH baseline and current sit below this

@@ -81,7 +81,8 @@ def run(out_json: str = "benchmarks/out/BENCH_simulate.json",
     for spec in SPECS:
         a = Analysis(spec, dense_threshold=DENSE_THRESHOLD)
         t0 = time.time()
-        ring = a.simulate("all_reduce", "ring", payload=PAYLOAD)
+        ring = a.simulate("all_reduce", "ring", payload=PAYLOAD,
+                          telemetry=True)
         val = a.network_model().validate(ring)
         ring_geq_model &= val["all_measured_geq_predicted"]
         tree = a.simulate("broadcast", "bfs_tree", payload=PAYLOAD)
@@ -117,10 +118,20 @@ def run(out_json: str = "benchmarks/out/BENCH_simulate.json",
             thpt_uniform_static=round(static_thpt, 4),
             seconds=round(secs, 2),
         ))
+        tel = ring.telemetry
         details[spec] = dict(
             ring=ring.to_dict(), validate=val, bfs_tree=tree.to_dict(),
             workload_uniform=uni.to_dict(),
             ring_util_histogram=ring.utilization_histogram(),
+            # per-round telemetry rollup: peak / mean directed-link
+            # utilization over the executed ring rounds + the argmax
+            # contended link (node, slot) — from RoundTelemetry, not a probe
+            link_utilization=dict(
+                rounds=int(tel.unique_rounds),
+                util_max=round(float(tel.round_util_max.max()), 4),
+                util_mean=round(float(tel.round_util_mean.mean()), 4),
+                hot_link=[int(v) for v in tel.argmax_link()],
+                max_round_ms=round(float(tel.round_seconds.max() * 1e3), 4)),
             binomial=None if binom is None else binom.to_dict(),
             halving_doubling=None if hd is None else hd.to_dict())
     thpt = {r["spec"]: r["thpt_uniform_sim"] for r in table}

@@ -147,6 +147,14 @@ def _run_scale_bench():
               and rows[0]["correctness"]["within_rss_budget"]))
 
 
+def _run_obs_overhead():
+    from . import obs_overhead
+
+    _timed("obs_overhead_span_tax", obs_overhead.run,
+           lambda rows: "overhead_frac=%.4f"
+           % rows[0]["correctness"]["overhead_frac"])
+
+
 #: name -> (runner, BENCH json this bench emits — None for ungated benches).
 #: Declaration order is execution order for the full suite.
 BENCHES: Dict[str, Tuple[Callable[[], None], str]] = {
@@ -162,7 +170,45 @@ BENCHES: Dict[str, Tuple[Callable[[], None], str]] = {
     "collective_model": (_run_collective_model, "BENCH_collective_model.json"),
     "roofline": (_run_roofline, "BENCH_roofline.json"),
     "scale": (_run_scale_bench, "BENCH_scale.json"),
+    "obs": (_run_obs_overhead, "BENCH_obs.json"),
 }
+
+
+def _run_instrumented(name: str) -> list:
+    """Run one bench under :mod:`repro.obs`: spans enabled, counters
+    snapshotted — and inject the observability ``meta`` block (peak RSS,
+    build/compile/execute phase breakdown, jit-trace count, span count) into
+    the BENCH json the bench just emitted.  Returns the bench's trace events
+    so the aggregator can write one merged ``benchmarks/out/trace.json``."""
+    from repro import obs
+
+    runner, bench_json = BENCHES[name]
+    rss0 = obs.peak_rss_kb()
+    before = obs.counters()
+    t0 = time.time()
+    with obs.tracing():
+        # no phase= tag: the wrapper must not swallow the per-phase rollup
+        with obs.span("bench/" + name, bench=name):
+            runner()
+        rep = obs.metrics_report()
+        events = list(obs.trace_events())
+    wall = time.time() - t0
+    if bench_json:
+        p = pathlib.Path("benchmarks/out") / bench_json
+        if p.exists():
+            payload = json.loads(p.read_text())
+            payload["meta"] = dict(
+                wall_seconds=round(wall, 3),
+                peak_rss_gb=round(rep.peak_rss_kb / 1e6, 3),
+                rss_growth_gb=round(max(0, rep.peak_rss_kb - rss0) / 1e6, 3),
+                phases={k: round(v, 3)
+                        for k, v in sorted(rep.phases.items())},
+                jit_traces=sum(
+                    obs.counter_delta(before, "jit_trace/").values()),
+                spans=len(events),
+            )
+            p.write_text(json.dumps(payload, indent=2))
+    return events
 
 
 def main(argv: List[str] = None) -> int:
@@ -180,8 +226,13 @@ def main(argv: List[str] = None) -> int:
     unknown = [n for n in names if n not in BENCHES]
     if unknown:
         ap.error(f"unknown bench name(s) {unknown}; known: {list(BENCHES)}")
+    events: List[dict] = []
     for name in names:
-        BENCHES[name][0]()
+        events += _run_instrumented(name)
+    out = pathlib.Path("benchmarks/out/trace.json")
+    out.parent.mkdir(parents=True, exist_ok=True)
+    out.write_text(json.dumps(
+        dict(traceEvents=events, displayTimeUnit="ms"), indent=1))
     return 0
 
 

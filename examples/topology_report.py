@@ -25,12 +25,18 @@ predictions of the main report — see docs/workloads.md.
     PYTHONPATH=src python examples/topology_report.py "slimfly(q=13)" \\
         --workload "qwen2_7b@dp=16,tp=4" --placement random
 
+``--trace out.json`` records the whole run as :mod:`repro.obs` spans, prints
+the span tree (name, wall time, peak-RSS delta per engine phase), and writes
+perfetto-loadable Chrome-trace JSON — see docs/observability.md.
+
 There is no per-topology dispatch here: the registry parses the spec, builds
 the instance, and the lazy Analysis session computes (and backend-selects)
 every reported quantity.
 """
 import argparse
+import contextlib
 
+from repro import obs
 from repro.api import Analysis, REGISTRY
 
 
@@ -69,28 +75,38 @@ def main():
                     choices=["linear", "round_robin", "random"],
                     help="logical-rank -> physical-node strategy for "
                          "--workload")
+    ap.add_argument("--trace", default=None, metavar="OUT_JSON",
+                    help="record the run as repro.obs spans, print the span "
+                         "tree, and write Chrome-trace JSON here")
     args = ap.parse_args()
     if args.list or not args.spec:
         print(list_families())
         if not args.spec:
             ap.error("a topology spec is required (see the list above)")
         return
-    a = Analysis(args.spec, dense_threshold=args.dense_threshold,
-                 lanczos_iters=args.lanczos_iters)
-    print(a.report())
-    if args.routing:
-        print("--- measured path structure (routing & traffic) ---")
-        print(a.routing().report())
-        print(a.traffic(args.traffic_pattern).report())
-    if args.workload:
-        print("--- executed training step (workload lowering) ---")
-        res = a.simulate(workload=args.workload, placement=args.placement)
-        print(res.plan.report())
-        print(res.report())
-    if args.fault_rate is not None:
-        print("--- resilience (degraded operation) ---")
-        print(a.fault_sweep(rates=(args.fault_rate,), model=args.fault_model,
-                            samples=args.fault_samples).report())
+    with contextlib.ExitStack() as stack:
+        if args.trace:
+            stack.enter_context(obs.tracing(args.trace))
+        a = Analysis(args.spec, dense_threshold=args.dense_threshold,
+                     lanczos_iters=args.lanczos_iters)
+        print(a.report())
+        if args.routing:
+            print("--- measured path structure (routing & traffic) ---")
+            print(a.routing().report())
+            print(a.traffic(args.traffic_pattern).report())
+        if args.workload:
+            print("--- executed training step (workload lowering) ---")
+            res = a.simulate(workload=args.workload, placement=args.placement)
+            print(res.plan.report())
+            print(res.report())
+        if args.fault_rate is not None:
+            print("--- resilience (degraded operation) ---")
+            print(a.fault_sweep(rates=(args.fault_rate,),
+                                model=args.fault_model,
+                                samples=args.fault_samples).report())
+        if args.trace:
+            print(f"--- span tree (trace written to {args.trace}) ---")
+            print(obs.render_tree())
 
 
 if __name__ == "__main__":

@@ -353,7 +353,8 @@ class Analysis:
                  hop_latency: float = C.PER_HOP_LATENCY,
                  root: int = 0,
                  scheme: str = "minimal",
-                 slack: int = 1) -> Any:
+                 slack: int = 1,
+                 telemetry: bool = False) -> Any:
         """Execute a collective algorithm or traffic workload on the links
         (lazy, cached per configuration).
 
@@ -394,6 +395,11 @@ class Analysis:
                 traffic workloads and demand-lowered collectives;
                 ``workload=`` runs always use minimal ECMP.
             slack: extra hops beyond shortest for ``scheme="ksp"``.
+            telemetry: attach per-round engine telemetry
+                (:class:`repro.core.simulate.RoundTelemetry` — round times,
+                per-round max/mean link loads and utilizations, argmax
+                contended link) as ``result.telemetry``.  Does not apply to
+                ``workload=`` runs.
 
         Returns:
             :class:`repro.core.simulate.SimulationResult` — measured times
@@ -433,20 +439,21 @@ class Analysis:
                                  f"{sorted(SM.SIM_ALGORITHMS)} + 'traffic')")
             algorithm = algorithm or SM.SIM_ALGORITHMS[collective][0]
         key = (collective, algorithm, pay, pattern, link_bw, hop_latency,
-               root, scheme, int(slack))
+               root, scheme, int(slack), bool(telemetry))
         if key not in cache:
             if collective == "traffic":
                 fiedler = self.fiedler if pattern == "adversarial" else None
                 cache[key] = SM.simulate_traffic(
                     self.topo, pattern, payloads=pay, link_bw=link_bw,
                     hop_latency=hop_latency, routing=self.routing(),
-                    fiedler=fiedler, scheme=scheme, slack=slack)
+                    fiedler=fiedler, scheme=scheme, slack=slack,
+                    telemetry=telemetry)
             else:
                 cache[key] = SM.simulate_collective(
                     self.topo, collective, algorithm, payloads=pay,
                     link_bw=link_bw, hop_latency=hop_latency,
                     routing=self.routing(), root=root, scheme=scheme,
-                    slack=slack)
+                    slack=slack, telemetry=telemetry)
         return cache[key]
 
     # -- degraded operation (fault tolerance, §3) --------------------------

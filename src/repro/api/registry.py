@@ -234,10 +234,12 @@ class TopologyRegistry:
 
     def build(self, spec: str) -> "Topology":
         """Parse a spec string and construct the instance it names."""
+        from repro import obs
         fam, bound = self.parse(spec)
-        if fam.variadic:
-            return fam.build(*bound[fam.params[0][0]])
-        return fam.build(**bound)
+        with obs.span("registry/build", phase="build", spec=spec):
+            if fam.variadic:
+                return fam.build(*bound[fam.params[0][0]])
+            return fam.build(**bound)
 
 
 #: process-wide singleton — the registration target of ``@register``.

@@ -9,6 +9,7 @@ no per-topology constructor dispatch anywhere.
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import json
 import pathlib
@@ -17,6 +18,7 @@ from typing import Any, Callable, Dict, List, Optional, Sequence, Union
 
 import numpy as np
 
+from repro import obs
 from repro.core import spectral as S
 from repro.core.graphs import Topology
 
@@ -261,6 +263,8 @@ def _batch_lanczos_rho2(analyses: Sequence[Analysis]) -> Dict[int, float]:
     for (n, width, iters, seed), grp in groups.items():
         if len(grp) < 2:
             continue
+        obs.count("survey/lanczos_groups")
+        obs.count("survey/lanczos_grouped_instances", len(grp))
         t0 = time.time()
         vals = S.rho2_lanczos_batched([a.topo for a in grp], iters=iters,
                                       seed=seed)
@@ -433,7 +437,8 @@ def survey(specs: Sequence[Union[str, Topology, Analysis]],
            faults: Optional[Union[float, Dict[str, Any]]] = None,
            routing: Optional[Union[bool, Dict[str, Any]]] = None,
            simulate: Optional[Union[bool, Dict[str, Any]]] = None,
-           workload: Optional[Any] = None
+           workload: Optional[Any] = None,
+           trace: Union[bool, str, pathlib.Path, None] = None
            ) -> SurveyResult:
     """Uniform spectral survey over many topologies (the paper's Table 1).
 
@@ -480,6 +485,11 @@ def survey(specs: Sequence[Union[str, Topology, Analysis]],
     *executes* it, appending :data:`WORKLOAD_COLUMNS` — simulated step time
     and its compute / per-phase-family communication breakdown (ms) next to
     the rho2 the paper says should predict it.
+
+    ``trace``: ``True`` records :mod:`repro.obs` spans for the whole survey
+    (build / batched-solve / per-row), readable afterwards via
+    ``obs.trace_events()`` / ``obs.metrics_report()``; a path writes the
+    Chrome-trace-event ``trace.json`` there on exit (perfetto-loadable).
     """
     cols = list(columns if columns is not None else DEFAULT_COLUMNS)
     fault_cfg = routing_cfg = sim_cfg = workload_cfg = None
@@ -504,33 +514,42 @@ def survey(specs: Sequence[Union[str, Topology, Analysis]],
     if unknown:
         raise KeyError(f"unknown survey column(s) {unknown}; available: "
                        f"{sorted(COLUMNS)} + {sorted(extra)}")
-    analyses, build_secs = [], []
-    for s in specs:
-        t0 = time.time()
-        analyses.append(_as_analysis(s, dense_threshold=dense_threshold,
-                                     lanczos_iters=lanczos_iters, seed=seed,
-                                     use_pallas_kernel=use_pallas_kernel))
-        build_secs.append(time.time() - t0)
-    solve_shares: Dict[int, float] = {}
-    if batch_lanczos:
-        solve_shares = _batch_lanczos_rho2(analyses)
-    rows = []
-    for a, built in zip(analyses, build_secs):
-        t0 = time.time()
-        row = {c: COLUMNS[c](a) for c in cols
-               if c != "seconds" and c in COLUMNS}
-        if fault_cfg is not None:
-            row.update(_fault_values(a, fault_cfg))
-        if routing_cfg is not None:
-            row.update(_routing_values(a, routing_cfg))
-        if sim_cfg is not None:
-            row.update(_sim_values(a, sim_cfg))
-        if workload_cfg is not None:
-            row.update(_workload_values(a, workload_cfg))
-        if "seconds" in cols:
-            # construction + (amortized) batched solve + lazy evaluation, so
-            # the column means what the pre-registry benchmark reported
-            row["seconds"] = round(
-                built + solve_shares.get(id(a), 0.0) + time.time() - t0, 2)
-        rows.append(row)
+    with contextlib.ExitStack() as stack:
+        if trace not in (None, False):
+            path = None if trace is True else trace
+            stack.enter_context(obs.tracing(path))
+        analyses, build_secs = [], []
+        with obs.span("survey/build", phase="build", specs=len(specs)):
+            for s in specs:
+                t0 = time.time()
+                analyses.append(_as_analysis(
+                    s, dense_threshold=dense_threshold,
+                    lanczos_iters=lanczos_iters, seed=seed,
+                    use_pallas_kernel=use_pallas_kernel))
+                build_secs.append(time.time() - t0)
+        solve_shares: Dict[int, float] = {}
+        if batch_lanczos:
+            with obs.span("survey/batched_lanczos", phase="execute"):
+                solve_shares = _batch_lanczos_rho2(analyses)
+        rows = []
+        for a, built in zip(analyses, build_secs):
+            t0 = time.time()
+            with obs.span("survey/row", phase="execute", instance=a.name,
+                          family=a.family or a.name):
+                row = {c: COLUMNS[c](a) for c in cols
+                       if c != "seconds" and c in COLUMNS}
+                if fault_cfg is not None:
+                    row.update(_fault_values(a, fault_cfg))
+                if routing_cfg is not None:
+                    row.update(_routing_values(a, routing_cfg))
+                if sim_cfg is not None:
+                    row.update(_sim_values(a, sim_cfg))
+                if workload_cfg is not None:
+                    row.update(_workload_values(a, workload_cfg))
+            if "seconds" in cols:
+                # construction + (amortized) batched solve + lazy evaluation,
+                # so the column means what the pre-registry bench reported
+                row["seconds"] = round(
+                    built + solve_shares.get(id(a), 0.0) + time.time() - t0, 2)
+            rows.append(row)
     return SurveyResult(rows=rows, columns=cols)

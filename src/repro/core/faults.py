@@ -32,6 +32,8 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro import obs
+
 from . import bounds as B
 from . import spectral as S
 from .graphs import Topology
@@ -291,6 +293,7 @@ class FaultSweepResult:
         return "\n".join(lines)
 
 
+@obs.traced("faults/sweep", phase="execute")
 def fault_sweep(topo: Topology, rates: Sequence[float] = (0.02, 0.05, 0.1, 0.2),
                 model: str = "link", samples: int = 32, seed: int = 0,
                 iters: int = 160, rho2_healthy: Optional[float] = None,
@@ -375,6 +378,7 @@ def fault_sweep(topo: Topology, rates: Sequence[float] = (0.02, 0.05, 0.1, 0.2),
         tabs, ws, degs = stacked_operands(degraded, width=healthy_width)
         rho2s = S.rho2_laplacian_batched(tabs, ws, degs, iters=iters, seed=seed)
         solves += 1
+        obs.count("faults/batched_solves")
         comps = np.array([connected_component_count(d.n, d.edges)
                           for d in degraded])
         connected = comps == 1

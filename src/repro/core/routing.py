@@ -38,8 +38,10 @@ import jax.numpy as jnp
 import numpy as np
 from jax.experimental import enable_x64
 
-from .graphs import Topology
+from repro import obs
 from repro.kernels import spmv as KS
+
+from .graphs import Topology
 
 __all__ = [
     "RoutingResult", "bfs_distances", "shortest_path_counts",
@@ -65,6 +67,8 @@ def _bfs_dist_chunk(table: jnp.ndarray, dist0: jnp.ndarray) -> jnp.ndarray:
     block) until no row changes.  Runs diameter(G)-many iterations, not n.
     Self-padded table entries only ever re-reach the vertex itself.
     """
+    obs.count("jit_trace/bfs")                   # trace-time increment
+
     def cond(state):
         _, _, active = state
         return active
@@ -98,6 +102,7 @@ def _sigma_chunk(table: jnp.ndarray, dist: jnp.ndarray,
     expanders blow through that well before n=10^5 — e.g. torus(32, 2)'s
     antipodal pairs have C(32, 16) ≈ 6.0e8 minimal paths.
     """
+    obs.count("jit_trace/sigma_dp")              # trace-time increment
     bk = KS.resolve_backend(backend)
     dmax = jnp.maximum(dist.max(), 0)
     acc_dt = jnp.float64 if jax.config.jax_enable_x64 else jnp.float32
@@ -325,6 +330,7 @@ def _bootstrap_avg_hops_ci(dist: np.ndarray, srcs: np.ndarray,
     return float(np.quantile(est, alpha)), float(np.quantile(est, 1.0 - alpha))
 
 
+@obs.traced("routing/analyze", phase="execute")
 def analyze_routing(topo: Union[Topology, Tuple[np.ndarray, int]],
                     sources: Optional[Sequence[int]] = None,
                     chunk: int = DEFAULT_SOURCE_CHUNK, *,
@@ -374,6 +380,7 @@ def analyze_routing(topo: Union[Topology, Tuple[np.ndarray, int]],
         srcs = np.arange(n, dtype=np.int64)
     else:
         srcs = np.asarray(list(sources), dtype=np.int64)
+    obs.count("routing/bfs_sources", int(srcs.size))
     dist = bfs_distances(table, srcs, chunk=chunk)
     sigma = shortest_path_counts(table, dist, chunk=chunk, backend=backend)
     finite = dist >= 0
@@ -387,8 +394,12 @@ def analyze_routing(topo: Union[Topology, Tuple[np.ndarray, int]],
     ecc = np.where(finite, dist, -1).max(axis=1)
     exact = bool(srcs.size == n)
     avg = float(hops.mean()) if hops.size else 0.0
-    ci = (avg, avg) if exact else _bootstrap_avg_hops_ci(
-        dist, srcs, used_seed, bootstrap, confidence)
+    if exact:
+        ci = (avg, avg)
+    else:
+        obs.count("routing/bootstrap_reps", int(bootstrap))
+        ci = _bootstrap_avg_hops_ci(dist, srcs, used_seed, bootstrap,
+                                    confidence)
     return RoutingResult(
         name=name, n=n, sources=srcs, exact=exact,
         dist=dist, sigma=sigma, diameter=diameter,

@@ -46,6 +46,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
+
 from .collectives import LINK_BW, PER_HOP_LATENCY
 from .graphs import Topology
 from .routing import (DEFAULT_SOURCE_CHUNK, RoutingResult, _bfs_dist_chunk,
@@ -54,9 +56,9 @@ from .traffic import (ROUTING_SCHEMES, _ecmp_loads_chunk, demand_matrix,
                       scheme_link_loads)
 
 __all__ = [
-    "Schedule", "SimulationResult", "SIM_ALGORITHMS", "compile_schedule",
-    "run_schedule", "simulate_collective", "simulate_traffic",
-    "stacked_ring_allreduce",
+    "Schedule", "SimulationResult", "RoundTelemetry", "SIM_ALGORITHMS",
+    "compile_schedule", "run_schedule", "simulate_collective",
+    "simulate_traffic", "stacked_ring_allreduce",
 ]
 
 #: collective -> known schedule algorithms (first entry is the default).
@@ -250,6 +252,7 @@ def _bfs_tree_rounds(table: np.ndarray, dist_root: np.ndarray
             np.asarray(hops, dtype=np.int32))
 
 
+@obs.traced("simulate/compile_schedule", phase="compile")
 def compile_schedule(topo: Union[Topology, Tuple[np.ndarray, int]],
                      collective: str = "all_reduce",
                      algorithm: Optional[str] = None, *,
@@ -338,6 +341,7 @@ def _engine(round_bytes: jnp.ndarray, counts: jnp.ndarray, hops: jnp.ndarray,
     link gates everyone) and repeats ``counts[u]`` times.  Returns
     (total seconds, (n, k) per-slot busy seconds).
     """
+    obs.count("jit_trace/round_engine")          # trace-time increment
     U = round_bytes.shape[0]
 
     def cond(state):
@@ -368,6 +372,102 @@ _engine_stacked = jax.jit(jax.vmap(_engine,
 
 
 @dataclasses.dataclass
+class RoundTelemetry:
+    """Per-round engine telemetry, indexed by **unique** round ``u``.
+
+    Computed host-side from the compiled schedule at one payload size (the
+    largest of the sweep), so it costs no extra device work.  Link loads are
+    per **unit payload** (the :class:`Schedule` convention): for a one-round
+    traffic schedule ``round_max_link_load.max()`` equals the static routing
+    layer's ``max_link_load`` on the same demand — the executed counterpart
+    of the quantity Theorem 2's spectral bound controls.  Utilizations are
+    busy fractions of the round: ``round_util_max`` is the straggler link's
+    drain share ``bw_seconds / round_seconds`` and ``round_util_mean``
+    averages over loaded slots.  ``hot_node[u], hot_slot[u]`` name the argmax
+    contended directed link as gather-table coordinates (the physical link is
+    ``hot_node -> table[hot_node, hot_slot]``).
+    """
+    round_seconds: np.ndarray          # (U,) seconds per execution of round u
+    round_bw_seconds: np.ndarray       # (U,) straggler-link drain term
+    round_latency_seconds: np.ndarray  # (U,) hops[u] * hop_latency term
+    round_max_link_load: np.ndarray    # (U,) peak slot bytes per unit payload
+    round_mean_link_load: np.ndarray   # (U,) mean over loaded slots
+    round_util_max: np.ndarray         # (U,) straggler busy fraction
+    round_util_mean: np.ndarray        # (U,) mean loaded-slot busy fraction
+    hot_node: np.ndarray               # (U,) argmax link source node
+    hot_slot: np.ndarray               # (U,) argmax link gather-table slot
+    counts: np.ndarray                 # (U,) repetitions of each unique round
+    hops: np.ndarray                   # (U,) store-and-forward hops
+    payload_bytes: float               # payload the seconds are computed at
+
+    @property
+    def unique_rounds(self) -> int:
+        return int(self.round_seconds.shape[0])
+
+    def argmax_link(self) -> Tuple[int, int]:
+        """(node, slot) of the most contended link over ALL rounds."""
+        u = int(self.round_max_link_load.argmax())
+        return int(self.hot_node[u]), int(self.hot_slot[u])
+
+    def total_seconds(self) -> float:
+        """Engine-identity check: ``sum(counts * round_seconds)`` equals the
+        measured completion time at ``payload_bytes`` (up to f32 rounding)."""
+        return float((self.counts.astype(np.float64)
+                      * self.round_seconds).sum())
+
+    def to_dict(self) -> Dict:
+        """JSON-ready per-round arrays (lists; U is small by construction)."""
+        node, slot = self.argmax_link()
+        return dict(
+            unique_rounds=self.unique_rounds,
+            payload_bytes=float(self.payload_bytes),
+            round_seconds=[round(float(t), 9) for t in self.round_seconds],
+            round_bw_seconds=[round(float(t), 9)
+                              for t in self.round_bw_seconds],
+            round_latency_seconds=[round(float(t), 9)
+                                   for t in self.round_latency_seconds],
+            round_max_link_load=[round(float(x), 9)
+                                 for x in self.round_max_link_load],
+            round_mean_link_load=[round(float(x), 9)
+                                  for x in self.round_mean_link_load],
+            round_util_max=[round(float(x), 6) for x in self.round_util_max],
+            round_util_mean=[round(float(x), 6)
+                             for x in self.round_util_mean],
+            hot_link=[node, slot],
+            counts=[int(c) for c in self.counts],
+            hops=[int(h) for h in self.hops])
+
+
+def _round_telemetry(schedule: Schedule, payload: float, link_bw: float,
+                     hop_latency: float) -> RoundTelemetry:
+    """Host-side per-round accounting mirroring the engine's round formula."""
+    rb = np.asarray(schedule.round_bytes, dtype=np.float64)
+    U = rb.shape[0]
+    flat = rb.reshape(U, -1)
+    idx = flat.argmax(axis=1)
+    max_load = flat[np.arange(U), idx]
+    node, slot = np.unravel_index(idx, rb.shape[1:])
+    loaded = (flat > 0).sum(axis=1)
+    mean_load = np.where(loaded > 0,
+                         flat.sum(axis=1) / np.maximum(loaded, 1), 0.0)
+    bw_s = max_load * payload / link_bw
+    lat_s = schedule.hops.astype(np.float64) * hop_latency
+    round_s = bw_s + lat_s
+    safe = np.where(round_s > 0, round_s, 1.0)
+    util_max = np.where(round_s > 0, bw_s / safe, 0.0)
+    util_mean = np.where(round_s > 0,
+                         mean_load * payload / link_bw / safe, 0.0)
+    return RoundTelemetry(
+        round_seconds=round_s, round_bw_seconds=bw_s,
+        round_latency_seconds=lat_s, round_max_link_load=max_load,
+        round_mean_link_load=mean_load, round_util_max=util_max,
+        round_util_mean=util_mean,
+        hot_node=node.astype(np.int64), hot_slot=slot.astype(np.int64),
+        counts=np.asarray(schedule.counts),
+        hops=np.asarray(schedule.hops), payload_bytes=float(payload))
+
+
+@dataclasses.dataclass
 class SimulationResult:
     """Measured execution of one schedule at one or more payload sizes.
 
@@ -392,6 +492,7 @@ class SimulationResult:
     dropped_demand: float          # unit-payload bytes to unreachable targets
     saturation_throughput: Optional[float]  # traffic workloads only (1/max load)
     seconds: float                 # wall time (compile + engine)
+    telemetry: Optional[RoundTelemetry] = None  # run_schedule(telemetry=True)
 
     def utilization(self, index: int = -1) -> np.ndarray:
         """(n, k) busy fraction of each directed slot at payload ``index``."""
@@ -436,7 +537,9 @@ class SimulationResult:
             dropped_demand=round(self.dropped_demand, 6),
             saturation_throughput=None if self.saturation_throughput is None
                 else round(self.saturation_throughput, 6),
-            seconds=round(self.seconds, 3))
+            seconds=round(self.seconds, 3),
+            telemetry=None if self.telemetry is None
+                else self.telemetry.to_dict())
 
     def report(self) -> str:
         """Compact text block for CLI reports."""
@@ -452,12 +555,14 @@ class SimulationResult:
         ])
 
 
+@obs.traced("simulate/run_schedule", phase="execute")
 def run_schedule(schedule: Schedule,
                  payloads: Union[float, Sequence[float]] = float(1 << 26), *,
                  link_bw: float = LINK_BW,
                  hop_latency: float = PER_HOP_LATENCY,
                  saturation_throughput: Optional[float] = None,
-                 t0: Optional[float] = None) -> SimulationResult:
+                 t0: Optional[float] = None,
+                 telemetry: bool = False) -> SimulationResult:
     """Execute a compiled schedule at B payload sizes in one vmapped call.
 
     Args:
@@ -469,6 +574,9 @@ def run_schedule(schedule: Schedule,
         saturation_throughput: passed through to the result (set by
             :func:`simulate_traffic`).
         t0: wall-clock start to attribute compile time to the result.
+        telemetry: attach a :class:`RoundTelemetry` (per-round times, link
+            loads, utilizations, argmax contended link) computed at the
+            largest payload of the sweep.
 
     Returns:
         :class:`SimulationResult` with measured times (seconds) and per-link
@@ -486,6 +594,10 @@ def run_schedule(schedule: Schedule,
     t_last = float(times[order[-1]])
     util = busy_last / t_last if t_last > 0 else np.zeros_like(busy_last)
     loaded = util[busy_last > 0]
+    tel = None
+    if telemetry:
+        tel = _round_telemetry(schedule, float(pay[order[-1]]),
+                               link_bw, hop_latency)
     return SimulationResult(
         name=schedule.name, collective=schedule.collective,
         algorithm=schedule.algorithm, n=schedule.n, rounds=schedule.rounds,
@@ -498,7 +610,7 @@ def run_schedule(schedule: Schedule,
         utilization_mean=float(loaded.mean()) if loaded.size else 0.0,
         dropped_demand=schedule.dropped_demand,
         saturation_throughput=saturation_throughput,
-        seconds=time.time() - t0)
+        seconds=time.time() - t0, telemetry=tel)
 
 
 # --------------------------------------------------------------------------
@@ -515,7 +627,8 @@ def simulate_collective(topo: Union[Topology, Tuple[np.ndarray, int]],
                         root: int = 0,
                         scheme: str = "minimal",
                         slack: int = 1,
-                        chunk: int = DEFAULT_SOURCE_CHUNK) -> SimulationResult:
+                        chunk: int = DEFAULT_SOURCE_CHUNK,
+                        telemetry: bool = False) -> SimulationResult:
     """Compile + execute one collective on one topology (see
     :func:`compile_schedule` / :func:`run_schedule` for the arguments).
 
@@ -529,7 +642,7 @@ def simulate_collective(topo: Union[Topology, Tuple[np.ndarray, int]],
                              root=root, scheme=scheme, slack=slack,
                              chunk=chunk)
     return run_schedule(sched, payloads, link_bw=link_bw,
-                        hop_latency=hop_latency, t0=t0)
+                        hop_latency=hop_latency, t0=t0, telemetry=telemetry)
 
 
 def simulate_traffic(topo: Union[Topology, Tuple[np.ndarray, int]],
@@ -542,7 +655,8 @@ def simulate_traffic(topo: Union[Topology, Tuple[np.ndarray, int]],
                      demands: Optional[np.ndarray] = None,
                      scheme: str = "minimal",
                      slack: int = 1,
-                     chunk: int = DEFAULT_SOURCE_CHUNK) -> SimulationResult:
+                     chunk: int = DEFAULT_SOURCE_CHUNK,
+                     telemetry: bool = False) -> SimulationResult:
     """Execute one traffic workload: every node injects ``payload`` bytes
     spread per the demand matrix, in one contention round on the links.
 
@@ -577,7 +691,8 @@ def simulate_traffic(topo: Union[Topology, Tuple[np.ndarray, int]],
     thpt = 1.0 / max_load if max_load > 0 else float("inf")
     return run_schedule(sched, payloads, link_bw=link_bw,
                         hop_latency=hop_latency,
-                        saturation_throughput=thpt, t0=t0)
+                        saturation_throughput=thpt, t0=t0,
+                        telemetry=telemetry)
 
 
 # --------------------------------------------------------------------------
@@ -590,6 +705,8 @@ def _stacked_ring_round(tables: jnp.ndarray, dist0: jnp.ndarray,
     """Per-sample ring-round lowering for a source chunk: BFS + sigma + ECMP
     in one vmapped call over the (B, n, k) stack.  Returns per-sample
     (loads (n, k), max served hops, dropped demand)."""
+    obs.count("jit_trace/stacked_ring_round")    # trace-time increment
+
     def one(tab):
         dist = _bfs_dist_chunk(tab, dist0)
         sigma = _sigma_chunk(tab, dist)

@@ -24,6 +24,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.kernels import spmv as KS
 from repro.launch import mesh as _mesh
 
@@ -184,6 +185,9 @@ def _lanczos_scan(op: Callable, v0: jnp.ndarray, m: int
     Traceable building block shared by the single-graph, batched (vmap), and
     Ritz-vector entry points.  Returns (alpha[m], beta[m], V[(m+1), n]).
     """
+    # trace-time: one increment per XLA (re)trace of any Lanczos entry point
+    # — the observable behind the survey's no-retrace regression gate
+    obs.count("jit_trace/lanczos_scan")
     n = v0.shape[0]
     v = v0.astype(jnp.float32)
     v = v / jnp.linalg.norm(v)
@@ -253,6 +257,8 @@ def lanczos_extremes(matvec: Callable, n: int, m: int = 200, seed: int = 0,
                      deflate_vectors: Optional[Sequence[np.ndarray]] = None
                      ) -> Tuple[float, float]:
     """(lambda_max, lambda_min) of the (deflated) operator."""
+    obs.count("lanczos/solves")
+    obs.count("lanczos/iters", m)
     key = jax.random.PRNGKey(seed)
     v0 = jax.random.normal(key, (n,), dtype=jnp.float32)
     deflate = None
@@ -275,6 +281,8 @@ def lanczos_top_ritz(matvec: Callable, n: int, m: int = 200, seed: int = 0,
     the matrix-free analogue of the dense ``fiedler_vector`` when the operator
     is the ones-deflated adjacency of a regular graph.
     """
+    obs.count("lanczos/solves")
+    obs.count("lanczos/iters", m)
     key = jax.random.PRNGKey(seed)
     v0 = jax.random.normal(key, (n,), dtype=jnp.float32)
     deflate = None
@@ -294,6 +302,7 @@ def lanczos_top_ritz(matvec: Callable, n: int, m: int = 200, seed: int = 0,
     return float(w[-1]), ritz
 
 
+@obs.traced("spectral/rho2_lanczos", phase="execute")
 def rho2_lanczos(topo: Topology, iters: int = 200, seed: int = 0,
                  matvec: Optional[Callable] = None) -> float:
     """rho_2 = k - lambda_2 for regular graphs, via ones-deflated Lanczos.
@@ -347,6 +356,7 @@ def _is_bipartite(topo: Topology) -> bool:
     return bool(nx.is_bipartite(topo.to_networkx()))
 
 
+@obs.traced("spectral/fiedler_lanczos", phase="execute")
 def fiedler_lanczos(topo: Topology, iters: int = 200, seed: int = 0) -> np.ndarray:
     """Approximate Fiedler vector, matrix-free (device-scale graphs).
 
@@ -396,6 +406,7 @@ def _truncate_at_breakdown(alphas: np.ndarray, betas: np.ndarray
     *smallest* one (the quantity the Laplacian path reports)."""
     zero = np.nonzero(betas == 0.0)[0]
     if zero.size:
+        obs.count("lanczos/breakdown_truncations")
         keep = int(zero[0]) + 1
         return alphas[:keep], betas[:max(keep - 1, 0)]
     return alphas, betas[:-1]
@@ -465,6 +476,7 @@ def _tile_indices(lo: int, hi: int, tile: int) -> Tuple[np.ndarray, int]:
     return idx, hi - lo
 
 
+@obs.traced("spectral/rho2_laplacian_batched", phase="execute")
 def rho2_laplacian_batched(tables: np.ndarray, weights: np.ndarray,
                            degs: np.ndarray, iters: int = 160,
                            seed: int = 0, *,
@@ -491,6 +503,8 @@ def rho2_laplacian_batched(tables: np.ndarray, weights: np.ndarray,
     tables = np.asarray(tables)
     weights, degs = np.asarray(weights), np.asarray(degs)
     B, n, k = tables.shape
+    obs.count("lanczos/solves", B)
+    obs.count("lanczos/iters", B * iters)
     key = jax.random.PRNGKey(seed)
     v0s = np.asarray(jax.random.normal(key, (B, n), dtype=jnp.float32))
     tile = _batch_tile(B, n, k, iters, batch_chunk)
@@ -538,6 +552,7 @@ def _signed_lanczos_batched(table: jnp.ndarray, slot_signs: jnp.ndarray,
     return jax.vmap(run)(slot_signs, v0s)
 
 
+@obs.traced("spectral/signed_extremes_batched", phase="execute")
 def signed_extremes_batched(table: np.ndarray, slot_signs: np.ndarray,
                             iters: int = 90, seed: int = 0, *,
                             batch_chunk: Optional[int] = None,
@@ -560,6 +575,8 @@ def signed_extremes_batched(table: np.ndarray, slot_signs: np.ndarray,
     """
     slot_signs = np.asarray(slot_signs)
     B, n, k = slot_signs.shape
+    obs.count("lanczos/solves", B)
+    obs.count("lanczos/iters", B * iters)
     v0s = np.asarray(jax.random.normal(jax.random.PRNGKey(seed), (B, n),
                                        dtype=jnp.float32))
     tab = jnp.asarray(table, dtype=jnp.int32)
@@ -600,6 +617,8 @@ def rho2_lanczos_batched(topos: Sequence[Topology], iters: int = 200,
         lws.append(w)
     if len(shapes) != 1:
         raise ValueError(f"neighbor tables must share one shape, got {shapes}")
+    obs.count("lanczos/solves", len(topos))
+    obs.count("lanczos/iters", len(topos) * iters)
     key = jax.random.PRNGKey(seed)
     n = topos[0].n
     v0s = jax.random.normal(key, (len(topos), n), dtype=jnp.float32)

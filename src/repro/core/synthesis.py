@@ -42,6 +42,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
+
 from ..api.registry import register
 from ..kernels import spmv as KS
 from . import bounds as B
@@ -154,6 +156,7 @@ def _anneal_signings(table, edge_slot, signings, key, shift, temp0, *,
     with the exact batched solve and keeps the per-candidate winner
     (elitism), so estimator bias can never lose ground.
     """
+    obs.count("jit_trace/anneal_signings")       # trace-time increment
     Bc, m = signings.shape
     n = table.shape[0]
     est = _lam_estimator(table, shift, est_iters, objective,
@@ -335,6 +338,7 @@ def _lift_seed(n: int, k: int, seed: int) -> Tuple[Topology, int]:
     return g, t
 
 
+@obs.traced("synthesis/lift_search", phase="execute")
 def lift_search(n: int, k: int, budget: int = DEFAULT_LIFT_BUDGET,
                 batch: int = DEFAULT_BATCH, seed: int = 0,
                 iters: int = 90) -> Tuple[Topology, List[float], int]:
@@ -368,6 +372,7 @@ def lift_search(n: int, k: int, budget: int = DEFAULT_LIFT_BUDGET,
     return g, traj, evals
 
 
+@obs.traced("synthesis/rewire_search", phase="execute")
 def rewire_search(n: int, k: int, budget: int = DEFAULT_REWIRE_BUDGET,
                   batch: int = DEFAULT_BATCH, seed: int = 0,
                   iters: int = 160, swap_fraction: float = 0.05

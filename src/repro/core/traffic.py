@@ -63,6 +63,8 @@ import jax.numpy as jnp
 import numpy as np
 from jax.experimental import enable_x64
 
+from repro import obs
+
 from .graphs import Topology
 from .routing import (DEFAULT_SOURCE_CHUNK, RoutingResult, analyze_routing,
                       reverse_slot_index)
@@ -224,6 +226,7 @@ def _ecmp_loads_chunk(table: jnp.ndarray, dist: jnp.ndarray,
     dist and drop out of the mask.  Returns the (n, k) load table summed over
     the block's sources.
     """
+    obs.count("jit_trace/ecmp")                  # trace-time increment
     bk = KS.resolve_backend(backend)
     dmax = jnp.maximum(dist.max(), 0)
 
@@ -293,6 +296,7 @@ def _ecmp_loads_cand_chunk(table: jnp.ndarray, dist: jnp.ndarray,
     source rows of the (S, M) matrix rebuilds the max statistic's sampling
     distribution without ever storing (S, n, k).
     """
+    obs.count("jit_trace/ecmp_candidates")       # trace-time increment
     bk = KS.resolve_backend(backend)
     dmax = jnp.maximum(dist.max(), 0)
 
@@ -413,6 +417,7 @@ def _ugal_qmin_chunk(table: jnp.ndarray, load_in: jnp.ndarray,
     :func:`repro.core.routing.reverse_slot_index`).  Self-padded slots never
     qualify as predecessors (their dist equals the row's own).
     """
+    obs.count("jit_trace/ugal_qmin")             # trace-time increment
     dmax = jnp.maximum(dist.max(), 0)
 
     def one(dist_s):
@@ -525,6 +530,7 @@ def _ksp_loads_chunk(table: jnp.ndarray, nopad: jnp.ndarray,
     ``slack=0`` reproduces minimal ECMP exactly (equal weight per minimal
     path — the same model as :func:`_ecmp_loads_chunk`).
     """
+    obs.count("jit_trace/ksp")                   # trace-time increment
     bk = KS.resolve_backend(backend)
     n, k = table.shape
 
@@ -651,6 +657,7 @@ def scheme_link_loads(table: np.ndarray, routing: RoutingResult,
 # multi-commodity-flow LP throughput ceiling
 # --------------------------------------------------------------------------
 
+@obs.traced("traffic/mcf_throughput_ub", phase="execute")
 def mcf_throughput_ub(topo: Union[Topology, Tuple[np.ndarray, int]],
                       pattern: str = "uniform", *,
                       fiedler: Optional[np.ndarray] = None,
@@ -804,6 +811,7 @@ class TrafficResult:
         ])
 
 
+@obs.traced("traffic/evaluate", phase="execute")
 def evaluate_traffic(topo: Union[Topology, Tuple[np.ndarray, int]],
                      pattern: str = "uniform", *,
                      scheme: str = "minimal",

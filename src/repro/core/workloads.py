@@ -55,6 +55,8 @@ from typing import Any, Dict, Iterator, List, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
+from repro import obs
+
 from .collectives import LINK_BW, PER_HOP_LATENCY
 from .graphs import Topology
 from .placement import place_ranks
@@ -421,6 +423,7 @@ class CommPlan:
         return "\n".join(lines)
 
 
+@obs.traced("workloads/plan", phase="compile")
 def plan_workload(spec: Union[str, WorkloadSpec]) -> CommPlan:
     """Lower one workload spec into its per-step :class:`CommPlan`.
 
@@ -657,6 +660,7 @@ class WorkloadResult:
         return "\n".join(lines)
 
 
+@obs.traced("workloads/simulate", phase="execute")
 def simulate_workload(topo: Union[Topology, Tuple[np.ndarray, int]],
                       workload: Union[str, WorkloadSpec, CommPlan], *,
                       placement: str = "linear", seed: int = 0,

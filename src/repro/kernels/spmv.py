@@ -25,10 +25,11 @@ resolved backend through their jitted solvers as a static argument, so a
 :func:`use_backend` override retraces them (the context manager clears the
 jit caches on entry and exit for exactly this reason).
 
-:func:`kernel_trace_count` counts Pallas-kernel *traces* since the last
-:func:`reset_kernel_trace_count` — the observable the call-counting tests
-use to prove an engine actually routed its matvecs through the kernel
-(clear the jit caches first; a cache hit never re-traces).
+Dispatch is observable through :mod:`repro.obs` counters (the call-counting
+tests read these instead of monkey-patching): ``spmv/pallas_trace`` counts
+Pallas-kernel *traces* (clear the jit caches first; a cache hit never
+re-traces), ``spmv/dispatch/<backend>`` counts dispatcher decisions, and
+``spmv/matvec/<backend>`` counts matvec closures per resolved backend.
 """
 from __future__ import annotations
 
@@ -41,10 +42,12 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro import obs
+
 __all__ = [
     "BACKENDS", "spmv", "spmv_ref", "spmv_padded", "spmv_matvec",
     "default_backend", "resolve_backend", "use_backend", "pallas_supported",
-    "kernel_backend", "kernel_trace_count", "reset_kernel_trace_count",
+    "kernel_backend",
 ]
 
 #: "ref" = pure jnp gather+sum; "pallas" = compiled kernel (TPU/GPU);
@@ -53,7 +56,6 @@ __all__ = [
 BACKENDS = ("ref", "pallas", "pallas_interpret")
 
 _OVERRIDE: Optional[str] = None
-_COUNTS = {"pallas": 0}
 
 
 def pallas_supported() -> bool:
@@ -110,16 +112,6 @@ def use_backend(backend: str):
     finally:
         _OVERRIDE = prev
         jax.clear_caches()
-
-
-def kernel_trace_count() -> int:
-    """Pallas-kernel traces since the last reset (not calls: a jit cache hit
-    replays a trace without re-entering Python)."""
-    return _COUNTS["pallas"]
-
-
-def reset_kernel_trace_count() -> None:
-    _COUNTS["pallas"] = 0
 
 
 # --------------------------------------------------------------------------
@@ -190,7 +182,7 @@ def spmv_padded(x: jnp.ndarray, table: jnp.ndarray,
     Ragged ``n % block_rows`` is handled by padding the streamed operands
     (padded rows gather into live x entries but are sliced off the output).
     """
-    _COUNTS["pallas"] += 1                       # trace-time: counts kernel traces
+    obs.count("spmv/pallas_trace")               # trace-time: counts kernel traces
     n, k = table.shape
     if loops is None:
         loops = jnp.zeros((n,), x.dtype)
@@ -235,6 +227,7 @@ def spmv(x: jnp.ndarray, table: jnp.ndarray,
          block_rows: int = 1024) -> jnp.ndarray:
     """Apply the padded gather-table operator through the resolved backend."""
     b = resolve_backend(backend)
+    obs.count("spmv/dispatch/" + b)
     if b == "ref":
         return spmv_ref(x, table, loops, signs)
     return spmv_padded(x, table, loops, signs, block_rows=block_rows,
@@ -247,6 +240,7 @@ def spmv_matvec(table, loops=None, *, backend: Optional[str] = None
     for :func:`repro.core.spectral.lanczos_tridiag` and friends.  The backend
     is resolved once, at closure creation."""
     b = resolve_backend(backend)
+    obs.count("spmv/matvec/" + b)
     tab = jnp.asarray(table, dtype=jnp.int32)
     lw = None if loops is None else jnp.asarray(loops, dtype=jnp.float32)
 

@@ -154,26 +154,23 @@ def test_survey_use_pallas_kernel_matches_default_path():
         assert rk["rho2"] == pytest.approx(rd["rho2"], abs=1e-3)
 
 
-def test_survey_use_pallas_kernel_skips_batched_grouping(monkeypatch):
+def test_survey_use_pallas_kernel_skips_batched_grouping():
     """Same-shape kernel-routed specs must NOT be pre-solved by the plain
-    batched Lanczos grouping — each row's matvec goes through the kernel."""
+    batched Lanczos grouping — each row's matvec goes through the kernel
+    (read from the ``spmv/matvec/<backend>`` counters of :mod:`repro.obs`)."""
+    from repro import obs
     from repro.kernels import spmv as KS
 
-    calls = {"n": 0}
-    real = KS.spmv_matvec
-
-    def counting(tab, loops=None, *, backend=None):
-        calls["n"] += 1
-        assert backend == KS.kernel_backend()
-        return real(tab, loops, backend=backend)
-
-    monkeypatch.setattr("repro.api.analysis.KS.spmv_matvec", counting)
     specs = ["random_regular(24,4,0)", "random_regular(24,4,1)"]
+    before = obs.counters()
     kern = survey(specs, columns=["spec", "backend", "rho2"],
                   dense_threshold=4, use_pallas_kernel=True)
+    delta = obs.counter_delta(before)
+    # one kernel-resolved matvec closure per row, zero batched grouping
+    assert delta.get("spmv/matvec/" + KS.kernel_backend(), 0) >= len(specs)
+    assert delta.get("survey/lanczos_groups", 0) == 0
     plain = survey(specs, columns=["spec", "backend", "rho2"],
                    dense_threshold=4)
-    assert calls["n"] >= len(specs)
     for rk, rp in zip(kern.rows, plain.rows):
         assert rk["backend"] == "lanczos"
         assert rk["rho2"] == pytest.approx(rp["rho2"], abs=1e-3)

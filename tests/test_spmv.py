@@ -3,7 +3,8 @@
 Parity: ``spmv_padded`` (interpret-mode Pallas on CPU) vs ``spmv_ref`` vs the
 dense adjacency oracle across dtypes, ragged block_rows, signed operands, and
 loop-regularized irregular graphs.  Dispatch: backend resolution order and the
-``use_backend`` override.  Routing: trace-count proofs that the spectral /
+``use_backend`` override.  Routing: trace-count proofs — read from the
+``spmv/pallas_trace`` counter of :mod:`repro.obs` — that the spectral /
 faults / synthesis / simulate engines actually apply their matvecs through
 the kernel under the kernel backend, and fall back cleanly to the reference
 path where Pallas cannot compile (CPU default).
@@ -13,6 +14,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro import obs
 from repro.core import spectral as S
 from repro.core import topologies as T
 from repro.kernels import spmv as KS
@@ -164,20 +166,22 @@ def test_kernel_backend_is_interpret_on_cpu():
 # engines route through the kernel (trace-count proofs) and fall back to ref
 # --------------------------------------------------------------------------
 
-def _count_traces(fn):
-    """Kernel traces caused by fn() under the kernel backend, from cold
-    caches (a cache hit replays a compiled trace without re-tracing)."""
-    with KS.use_backend(KS.kernel_backend()):   # clears jit caches on entry
-        KS.reset_kernel_trace_count()
+def _pallas_traces(fn, backend):
+    """Kernel traces caused by fn() under ``backend``, from cold caches (a
+    cache hit replays a compiled trace without re-tracing), read from the
+    ``spmv/pallas_trace`` counter of :mod:`repro.obs`."""
+    with KS.use_backend(backend):               # clears jit caches on entry
+        before = obs.counters()
         fn()
-        return KS.kernel_trace_count()
+        return obs.counter_delta(before).get("spmv/pallas_trace", 0)
+
+
+def _count_traces(fn):
+    return _pallas_traces(fn, KS.kernel_backend())
 
 
 def _count_ref(fn):
-    with KS.use_backend("ref"):
-        KS.reset_kernel_trace_count()
-        fn()
-        return KS.kernel_trace_count()
+    return _pallas_traces(fn, "ref")
 
 
 def test_spectral_routes_through_kernel():

@@ -14,7 +14,9 @@ nothing):
    AND every column it lists — appears backticked in ``docs/api.md``, so
    a column addition can't silently skip the docs;
 5. every public symbol of ``repro.core.workloads`` appears in
-   ``docs/workloads.md`` (the subsystem page documents its own API).
+   ``docs/workloads.md`` (the subsystem page documents its own API);
+6. every public symbol of ``repro.obs`` appears in
+   ``docs/observability.md`` (same per-subsystem-page rule).
 
 Exit code 0 when clean, 1 with a per-failure listing otherwise::
 
@@ -36,10 +38,11 @@ _LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
 DOC_FILES = ["README.md", "docs/architecture.md", "docs/theory.md",
              "docs/api.md", "docs/synthesis.md", "docs/simulation.md",
              "docs/workloads.md", "docs/scale.md",
-             "docs/routing-schemes.md"]
+             "docs/routing-schemes.md", "docs/observability.md"]
 API_INIT = "src/repro/api/__init__.py"
 SURVEY_MODULE = "src/repro/api/survey.py"
 WORKLOADS_MODULE = "src/repro/core/workloads.py"
+OBS_MODULE = "src/repro/obs.py"
 REGISTER_FILES = ["src/repro/core/topologies.py", "src/repro/core/ramanujan.py",
                   "src/repro/core/synthesis.py"]
 
@@ -147,6 +150,22 @@ def check_workloads_coverage(root: pathlib.Path) -> List[str]:
     return errors
 
 
+def check_obs_coverage(root: pathlib.Path) -> List[str]:
+    """Every repro.obs public symbol named in docs/observability.md."""
+    obs_md = root / "docs" / "observability.md"
+    if not obs_md.exists():
+        return ["docs/observability.md is missing"]
+    if not (root / OBS_MODULE).exists():
+        return [f"missing module {OBS_MODULE} (listed in OBS_MODULE)"]
+    text = obs_md.read_text()
+    errors = []
+    for sym in _module_all(root / OBS_MODULE):
+        if not _documented(sym, text):
+            errors.append(f"docs/observability.md: repro.obs symbol "
+                          f"{sym!r} undocumented")
+    return errors
+
+
 def check_api_coverage(root: pathlib.Path) -> List[str]:
     """Every repro.api public symbol + registered family named in docs/api.md."""
     api_md = root / "docs" / "api.md"
@@ -186,6 +205,7 @@ def main(argv=None) -> int:
     errors += check_api_coverage(root)
     errors += check_columns_coverage(root)
     errors += check_workloads_coverage(root)
+    errors += check_obs_coverage(root)
     missing = [rel for rel in DOC_FILES if not (root / rel).exists()]
     errors += [f"missing doc file {rel}" for rel in missing]
     if errors:
@@ -195,7 +215,7 @@ def main(argv=None) -> int:
         return 1
     print(f"docs gate passed: {len(md_files)} files, links resolve, "
           "repro.api, every registered family, every *_COLUMNS constant, "
-          "and repro.core.workloads documented")
+          "repro.core.workloads, and repro.obs documented")
     return 0
 
 
